@@ -1,0 +1,52 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call in microseconds (blocks on jax outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def mtls_problem(key, n, d, m, rank=10):
+    """Paper §5.1 synthetic generator: ground truth rank-10, ||W||_* = 1."""
+    ku, kv, kx = jax.random.split(key, 3)
+    u = jnp.linalg.qr(jax.random.normal(ku, (d, max(rank, 1))))[0]
+    v = jnp.linalg.qr(jax.random.normal(kv, (m, max(rank, 1))))[0]
+    s = jnp.linspace(1.0, 0.1, rank)
+    s = s / jnp.sum(s)
+    w = (u * s) @ v.T
+    x = jax.random.normal(kx, (n, d))
+    return x, x @ w, w
+
+
+def logistic_problem(key, n, d, m, scale=5.0):
+    kx, kw = jax.random.split(key)
+    w = jax.random.normal(kw, (d, m))
+    w = scale * w / jnp.linalg.norm(w, ord="nuc")
+    x = jax.random.normal(kx, (n, d))
+    y = jnp.argmax(x @ w, axis=1)
+    return x, y, w

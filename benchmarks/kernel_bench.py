@@ -1,0 +1,48 @@
+"""Kernel microbench: FLOPs / HBM bytes / arithmetic intensity per kernel
+config (the TPU-relevant numbers) + CPU ref-path wall time as a smoke check."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention, power_matvec, rank1_update
+
+from .common import emit, time_call
+
+
+def run():
+    # power_matvec: A(n,m)@v — bandwidth-bound, AI ~ 0.5 FLOP/B in f32
+    for n, m in ((4096, 2048), (16384, 2048)):
+        a = jax.random.normal(jax.random.PRNGKey(0), (n, m))
+        v = jax.random.normal(jax.random.PRNGKey(1), (m,))
+        us = time_call(lambda: power_matvec.matvec(a, v, use_pallas=False))
+        flops = 2 * n * m
+        bytes_ = 4 * (n * m + n + m)
+        emit(f"kern.matvec.{n}x{m}", us,
+             f"flops={flops:.2e};hbm_bytes={bytes_:.2e};AI={flops/bytes_:.2f}")
+
+    # rank1_update fused vs unfused traffic
+    n, m = 4096, 2048
+    z = jax.random.normal(jax.random.PRNGKey(2), (n, m))
+    xv = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    yv = jax.random.normal(jax.random.PRNGKey(4), (m,))
+    us = time_call(lambda: rank1_update.rank1_update(z, xv, yv, 0.9, -0.1,
+                                                     use_pallas=False))
+    fused = 4 * (2 * n * m)
+    unfused = 4 * (4 * n * m)
+    emit(f"kern.rank1.{n}x{m}", us,
+         f"fused_bytes={fused:.2e};unfused_bytes={unfused:.2e};saving={unfused/fused:.1f}x")
+
+    # flash attention: FLOPs and VMEM working set per block config
+    b, hq, hkv, s, dh = 1, 8, 2, 2048, 128
+    q = jax.random.normal(jax.random.PRNGKey(5), (b, hq, s, dh), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(6), (b, hkv, s, dh), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(7), (b, hkv, s, dh), jnp.bfloat16)
+    us = time_call(lambda: flash_attention.flash_attention(
+        q, k, v, scale=dh**-0.5, causal=True, use_pallas=False))
+    flops = 4 * b * hq * s * s * dh  # qk^T + pv
+    for bq, bk in ((128, 128), (256, 512)):
+        vmem = 2 * (bq * dh + 2 * bk * dh) + 4 * (bq * dh + 2 * bq)  # bf16 io + f32 acc
+        emit(f"kern.flash.s{s}.bq{bq}.bk{bk}", us,
+             f"flops={flops:.2e};vmem_bytes={vmem:.2e};"
+             f"fits_vmem={vmem < 16 * 2**20}")

@@ -1,0 +1,38 @@
+"""Theorem 2 regimes: power-method accuracy vs K against the
+Kuczynski-Wozniakowski ln(m)/(K-1) bound and the spectral-gap rate."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import top_singular_pair
+
+from .common import emit
+
+
+def run(m: int = 64, d: int = 96, trials: int = 32):
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (d, m))
+    s1 = float(jnp.linalg.svd(a, compute_uv=False)[0])
+    for k in (2, 4, 8, 16):
+        errs = []
+        for t in range(trials):
+            res = top_singular_pair(a, jax.random.fold_in(key, 17 * t + k), num_iters=k)
+            errs.append(abs(float(res.sigma) ** 2 - s1**2) / s1**2)
+        bound = 0.871 * np.log(m) / (k - 1)
+        emit(f"thm2.K{k}", 0.0,
+             f"mean_rel_err={np.mean(errs):.5f};kw_bound={bound:.5f};"
+             f"within_bound={np.mean(errs) <= bound}")
+
+    # well-behaved regime (paper §5: ratio ~0.86): error decays ~beta^(2K)
+    u, s, vt = jnp.linalg.svd(a, full_matrices=False)
+    s_gap = s.at[1:].multiply(0.5)  # enforce sigma2/sigma1 = 0.5 * old ratio
+    a_gap = (u * s_gap) @ vt
+    s1g = float(s_gap[0])
+    errs_by_k = []
+    for k in (2, 4, 8):
+        res = top_singular_pair(a_gap, jax.random.PRNGKey(5), num_iters=k)
+        errs_by_k.append(abs(float(res.sigma) - s1g) / s1g)
+    emit("thm2.spectral_gap_decay", 0.0,
+         f"errs={';'.join(f'{e:.2e}' for e in errs_by_k)};monotone={errs_by_k[0] >= errs_by_k[-1]}")

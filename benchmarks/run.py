@@ -1,0 +1,57 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run a single benchmark module")
+    ap.add_argument("--fast", action="store_true", help="smaller sizes")
+    args = ap.parse_args()
+
+    from . import (
+        comm_cost,
+        imagenet_head,
+        kernel_bench,
+        logistic_convergence,
+        mtls_convergence,
+        power_accuracy,
+        roofline,
+        scaling,
+    )
+
+    suites = {
+        "table1_comm_cost": comm_cost.run,
+        "fig1_mtls": (lambda: mtls_convergence.run(epochs=15, n=8000, d=128, m=128))
+        if args.fast else mtls_convergence.run,
+        "fig2_logistic": (lambda: logistic_convergence.run(epochs=12, n=4000, d=96, m=48))
+        if args.fast else logistic_convergence.run,
+        "fig3_imagenet_head": (lambda: imagenet_head.run(epochs=15, m=50, tokens=2048))
+        if args.fast else imagenet_head.run,
+        "fig4_scaling": scaling.run,
+        "thm2_power_accuracy": power_accuracy.run,
+        "kernels": kernel_bench.run,
+        "roofline": roofline.run,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in suites.items():
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            print(f"{name},0.0,FAILED({type(e).__name__}:{e})")
+    if failures:
+        sys.exit(f"benchmark suites failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: DFW-TRACE on multi-task least squares in ~40 lines.
+
+Reproduces the paper's core result at laptop scale: a rank-10 matrix with
+unit trace norm is recovered from linear measurements using only rank-1
+updates and 2 power iterations per epoch.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import fit, low_rank, tasks
+
+# --- synthetic problem (paper §5.1): W* has rank 10, ||W*||_* = 1 ----------
+key = jax.random.PRNGKey(0)
+n, d, m, rank = 20_000, 300, 300, 10
+ku, kv, kx = jax.random.split(key, 3)
+u = jnp.linalg.qr(jax.random.normal(ku, (d, rank)))[0]
+v = jnp.linalg.qr(jax.random.normal(kv, (m, rank)))[0]
+s = jnp.linspace(1.0, 0.1, rank)
+w_true = (u * (s / s.sum())) @ v.T
+x = jax.random.normal(kx, (n, d))
+y = x @ w_true
+
+# --- DFW-TRACE --------------------------------------------------------------
+task = tasks.MultiTaskLeastSquares(d=d, m=m)
+result = fit(
+    task,
+    task.init_state(x, y),
+    mu=1.0,  # trace-norm budget (the paper sets mu = ||W*||_* = 1)
+    num_epochs=50,
+    key=jax.random.PRNGKey(1),
+    schedule="const:2",  # DFW-TRACE-2: 2 power iterations per epoch
+    step_size="linesearch",  # closed-form for least squares (paper App. B)
+    callback=lambda t, aux: print(
+        f"epoch {t:3d}  F(W)={float(aux.loss):10.4f}  gap<={float(aux.gap):9.4f} "
+        f"gamma={float(aux.gamma):.3f}"
+    ) if t % 10 == 0 else None,
+)
+
+w_hat = low_rank.materialize(result.iterate)
+rel_err = float(jnp.linalg.norm(w_hat - w_true) / jnp.linalg.norm(w_true))
+print(f"\nrecovered rank-{int(result.iterate.count)} iterate, "
+      f"relative error {rel_err:.4f}")
+print(f"iterate storage: factored O(t(d+m)) = "
+      f"{int(result.iterate.count) * (d + m) * 4 / 1e6:.2f} MB "
+      f"vs dense O(dm) = {d * m * 4 / 1e6:.2f} MB")
+assert rel_err < 0.25

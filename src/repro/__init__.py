@@ -1,0 +1,13 @@
+"""repro — DFW-TRACE distributed Frank-Wolfe framework + LM architecture zoo.
+
+Subpackages:
+    core      — the paper's contribution (distributed FW for trace-norm balls)
+    kernels   — Pallas TPU kernels (power matvec, rank-1 update, flash attn)
+    models    — 10-arch model zoo (dense/MoE/VLM/audio/hybrid/SSM)
+    configs   — exact published configs + smoke variants
+    launch    — mesh, sharding rules, train/serve/dryrun drivers
+    data      — deterministic sharded data pipeline
+    optim     — AdamW, schedules, PowerSGD-style gradient compression
+    checkpoint— sharded save/restore with elastic re-mesh
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+from .store import CheckpointStore
+
+__all__ = ["CheckpointStore"]

@@ -1,0 +1,43 @@
+"""DFW-TRACE: the paper's contribution as a composable JAX library.
+
+Public surface:
+    frank_wolfe.fit / make_epoch_step   — DFW-TRACE (paper Alg. 2)
+    power_method.power_iterations       — distributed power method
+    baselines.make_naive_epoch_step     — NAIVE-DFW (paper §3.1)
+    baselines.make_sva_epoch_step       — Singular Vector Averaging (§3.1)
+    tasks.MultiTaskLeastSquares[Dense]  — paper §2.3 / App. B
+    tasks.MultinomialLogistic           — paper §2.3 / App. B
+    low_rank.FactoredIterate            — O(t(d+m)) iterate store (§2.2)
+    dfw_head.DFWHeadTrainer             — trace-norm head training on LM zoo
+"""
+from . import baselines, dfw_head, frank_wolfe, low_rank, power_method, tasks, trace_norm
+from .frank_wolfe import EpochAux, FitResult, fit, k_schedule, make_epoch_step
+from .low_rank import FactoredIterate
+from .power_method import PowerResult, power_iterations, sphere_vector, top_singular_pair
+from .tasks import MultinomialLogistic, MultiTaskLeastSquares, MultiTaskLeastSquaresDense
+from .trace_norm import duality_gap, lmo_trace_ball, trace_norm
+
+__all__ = [
+    "baselines",
+    "frank_wolfe",
+    "low_rank",
+    "power_method",
+    "tasks",
+    "trace_norm",
+    "EpochAux",
+    "FitResult",
+    "fit",
+    "k_schedule",
+    "make_epoch_step",
+    "FactoredIterate",
+    "PowerResult",
+    "power_iterations",
+    "sphere_vector",
+    "top_singular_pair",
+    "MultinomialLogistic",
+    "MultiTaskLeastSquares",
+    "MultiTaskLeastSquaresDense",
+    "duality_gap",
+    "lmo_trace_ball",
+    "trace_norm",
+]

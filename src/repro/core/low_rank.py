@@ -1,0 +1,82 @@
+"""Factored low-rank iterate store.
+
+FW with W^0 = 0 yields W^t = sum_k c_k u_k v_k^T — rank <= t. Storing the
+factors costs O(t(d+m)) instead of O(dm) (paper §2.2). Buffers are
+preallocated at max_rank so every shape is static under jit; the FW recurrence
+``W <- (1-gamma) W + gamma S`` is absorbed into a running global scale so each
+epoch touches O(d+m) memory, not O(t(d+m)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FactoredIterate(NamedTuple):
+    """W = alpha * sum_{k<count} s[k] * U[k] V[k]^T."""
+
+    u: jax.Array  # (max_rank, d)
+    s: jax.Array  # (max_rank,)
+    v: jax.Array  # (max_rank, m)
+    alpha: jax.Array  # () running global scale
+    count: jax.Array  # () int32, number of live factors
+
+
+def init(max_rank: int, d: int, m: int, dtype=jnp.float32) -> FactoredIterate:
+    return FactoredIterate(
+        u=jnp.zeros((max_rank, d), dtype),
+        s=jnp.zeros((max_rank,), dtype),
+        v=jnp.zeros((max_rank, m), dtype),
+        alpha=jnp.ones((), dtype),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def fw_update(
+    it: FactoredIterate, u: jax.Array, v: jax.Array, gamma: jax.Array, mu: float
+) -> FactoredIterate:
+    """W <- (1-gamma) W + gamma (-mu u v^T), appending one factor.
+
+    Instead of rescaling all live factors by (1-gamma) — an O(t) sweep — we
+    fold it into ``alpha`` and store the new factor pre-divided by the new
+    alpha. gamma=1 (epoch 0) is handled by flooring alpha away from zero;
+    the stored s then exactly cancels the floor.
+    """
+    new_alpha = it.alpha * (1.0 - gamma)
+    safe_alpha = jnp.where(jnp.abs(new_alpha) < 1e-30, 1.0, new_alpha)
+    s_new = -gamma * mu / safe_alpha
+    k = it.count
+    return FactoredIterate(
+        u=jax.lax.dynamic_update_slice(it.u, u[None, :].astype(it.u.dtype), (k, 0)),
+        s=jax.lax.dynamic_update_slice(it.s, s_new[None].astype(it.s.dtype), (k,)),
+        v=jax.lax.dynamic_update_slice(it.v, v[None, :].astype(it.v.dtype), (k, 0)),
+        alpha=safe_alpha,
+        count=k + 1,
+    )
+
+
+def materialize(it: FactoredIterate) -> jax.Array:
+    """Dense W — O(dm) memory; for tests/small problems only."""
+    return it.alpha * jnp.einsum("k,kd,km->dm", it.s, it.u, it.v)
+
+
+def matvec(it: FactoredIterate, x: jax.Array) -> jax.Array:
+    """W @ x in O(t(d+m)) without materializing W."""
+    return it.alpha * (it.u.T @ (it.s * (it.v @ x)))
+
+
+def rmatvec(it: FactoredIterate, x: jax.Array) -> jax.Array:
+    """W^T @ x in O(t(d+m))."""
+    return it.alpha * (it.v.T @ (it.s * (it.u @ x)))
+
+
+def right_multiply(it: FactoredIterate, x: jax.Array) -> jax.Array:
+    """X @ W for row-major data X (n,d) -> (n,m), factored: (X U^T) diag(s) V."""
+    return it.alpha * (((x @ it.u.T) * it.s) @ it.v)
+
+
+def trace_norm_upper_bound(it: FactoredIterate) -> jax.Array:
+    """||W||_* <= alpha * sum_k |s_k| (triangle inequality on unit factors)."""
+    return jnp.abs(it.alpha) * jnp.sum(jnp.abs(it.s))

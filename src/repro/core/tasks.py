@@ -1,0 +1,178 @@
+"""Paper tasks (§2.3) with Appendix-B *sufficient information* updates.
+
+Each task exposes the implicit-gradient operator interface consumed by the FW
+driver and the distributed power method. State lives per-worker (per mesh
+shard of the sample axis n); the driver psums the O(d+m) vectors.
+
+Interface (duck-typed; see ``frank_wolfe.DFWTask``):
+    init_state(X, Y)      -> state pytree (local shard)
+    matvec(state, v)      -> local  grad_j @ v          (d,)
+    rmatvec(state, u)     -> local  grad_j^T @ u        (m,)
+    update(state,u,v,g,mu)-> state after W <- (1-g)W - g*mu u v^T
+    local_loss(state)     -> local loss contribution    ()
+    inner_w_grad(state)   -> local <W, grad_j>          ()   (duality gap)
+    local_grad(state)     -> dense local gradient (d,m)      (baselines only)
+    linesearch(...)       -> optional closed-form step (MTLS only)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Multi-task least squares:  F(W) = 1/2 ||XW - Y||_F^2
+# ---------------------------------------------------------------------------
+
+
+class MTLSState(NamedTuple):
+    """Low-rank ('sufficient information') representation, paper App. B.
+
+    Stores the residual R = X W - Y instead of the d x m gradient; every
+    FW quantity is a chain of matvecs through X and R. Memory O(n_j(d+m)).
+    """
+
+    x: jax.Array  # (n_j, d)
+    y: jax.Array  # (n_j, m)
+    r: jax.Array  # (n_j, m) residual X W - Y
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiTaskLeastSquares:
+    d: int
+    m: int
+
+    def init_state(self, x: jax.Array, y: jax.Array) -> MTLSState:
+        # W^0 = 0  =>  R = -Y
+        return MTLSState(x=x, y=y, r=-y)
+
+    # grad = X^T R ; never materialized.
+    def matvec(self, s: MTLSState, v: jax.Array) -> jax.Array:
+        return s.x.T @ (s.r @ v)
+
+    def rmatvec(self, s: MTLSState, u: jax.Array) -> jax.Array:
+        return s.r.T @ (s.x @ u)
+
+    def update(self, s: MTLSState, u, v, gamma, mu) -> MTLSState:
+        # R' = X[(1-g)W + g S] - Y = (1-g)R - g Y - g mu (X u) v^T
+        xu = s.x @ u
+        r = (1.0 - gamma) * s.r - gamma * s.y - (gamma * mu) * jnp.outer(xu, v)
+        return MTLSState(x=s.x, y=s.y, r=r)
+
+    def local_loss(self, s: MTLSState) -> jax.Array:
+        return 0.5 * jnp.sum(s.r * s.r)
+
+    def inner_w_grad(self, s: MTLSState) -> jax.Array:
+        # <W, X^T R> = <X W, R> = <R + Y, R>
+        return jnp.sum((s.r + s.y) * s.r)
+
+    def local_grad(self, s: MTLSState) -> jax.Array:
+        return s.x.T @ s.r
+
+    def linesearch_terms(self, s: MTLSState, u, v, mu):
+        """Local (numerator, denominator) of the closed-form step (App. B):
+
+        gamma* = <-grad, D> / <X^T X D, D>,  D = S - W,
+        computed via X D = -mu (X u) v^T - (R + Y)  — all O(n_j(d+m)).
+        Returns local contributions; caller psums then divides.
+        """
+        xd = -(mu) * jnp.outer(s.x @ u, v) - (s.r + s.y)
+        numer = -jnp.sum(s.r * xd)
+        denom = jnp.sum(xd * xd)
+        return numer, denom
+
+
+class MTLSDenseState(NamedTuple):
+    """Dense sufficient information (paper App. B, 'dense' column):
+    (X^T X, X^T Y, grad). Memory O(d^2 + dm); epoch cost independent of n_j.
+    Preferable when n_j >> max(d, m)."""
+
+    xtx: jax.Array  # (d, d) fixed
+    xty: jax.Array  # (d, m) fixed
+    g: jax.Array  # (d, m) local gradient X^T X W - X^T Y
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiTaskLeastSquaresDense:
+    d: int
+    m: int
+
+    def init_state(self, x: jax.Array, y: jax.Array) -> MTLSDenseState:
+        xty = x.T @ y
+        return MTLSDenseState(xtx=x.T @ x, xty=xty, g=-xty)
+
+    def matvec(self, s: MTLSDenseState, v: jax.Array) -> jax.Array:
+        return s.g @ v
+
+    def rmatvec(self, s: MTLSDenseState, u: jax.Array) -> jax.Array:
+        return s.g.T @ u
+
+    def update(self, s: MTLSDenseState, u, v, gamma, mu) -> MTLSDenseState:
+        # grad' = (1-g) grad + g (X^T X S - X^T Y),  X^T X S = -mu (X^T X u) v^T
+        rank1 = -(mu) * jnp.outer(s.xtx @ u, v)
+        g = (1.0 - gamma) * s.g + gamma * (rank1 - s.xty)
+        return MTLSDenseState(xtx=s.xtx, xty=s.xty, g=g)
+
+    def local_grad(self, s: MTLSDenseState) -> jax.Array:
+        return s.g
+
+
+# ---------------------------------------------------------------------------
+# Multinomial logistic regression:
+#   F(W) = sum_i [ logsumexp(x_i W) - (x_i W)_{y_i} ]
+# ---------------------------------------------------------------------------
+
+
+class LogisticState(NamedTuple):
+    x: jax.Array  # (n_j, d)
+    y: jax.Array  # (n_j,) int labels
+    z: jax.Array  # (n_j, m) logits X W  (low-rank-updated)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultinomialLogistic:
+    d: int
+    m: int
+
+    def init_state(self, x: jax.Array, y: jax.Array) -> LogisticState:
+        return LogisticState(x=x, y=y, z=jnp.zeros((x.shape[0], self.m), x.dtype))
+
+    def _probs(self, s: LogisticState) -> jax.Array:
+        return jax.nn.softmax(s.z, axis=-1)
+
+    # grad = X^T (P - H); H is one-hot(y). Never materialized.
+    def matvec(self, s: LogisticState, v: jax.Array) -> jax.Array:
+        pv = self._probs(s) @ v - v[s.y]  # (n_j,)
+        return s.x.T @ pv
+
+    def rmatvec(self, s: LogisticState, u: jax.Array) -> jax.Array:
+        t = s.x @ u  # (n_j,)
+        return self._probs(s).T @ t - jnp.zeros((self.m,), t.dtype).at[s.y].add(t)
+
+    def update(self, s: LogisticState, u, v, gamma, mu) -> LogisticState:
+        z = (1.0 - gamma) * s.z - (gamma * mu) * jnp.outer(s.x @ u, v)
+        return LogisticState(x=s.x, y=s.y, z=z)
+
+    def local_loss(self, s: LogisticState) -> jax.Array:
+        lse = jax.scipy.special.logsumexp(s.z, axis=-1)
+        return jnp.sum(lse - jnp.take_along_axis(s.z, s.y[:, None], axis=-1)[:, 0])
+
+    def inner_w_grad(self, s: LogisticState) -> jax.Array:
+        # <W, X^T(P-H)> = <Z, P - H>
+        p = self._probs(s)
+        zy = jnp.take_along_axis(s.z, s.y[:, None], axis=-1)[:, 0]
+        return jnp.sum(s.z * p) - jnp.sum(zy)
+
+    def local_grad(self, s: LogisticState) -> jax.Array:
+        p = self._probs(s)
+        h = jax.nn.one_hot(s.y, self.m, dtype=p.dtype)
+        return s.x.T @ (p - h)
+
+    def errors(self, s: LogisticState, top_k: int = 5) -> jax.Array:
+        """Local count of top-k misclassifications (paper's error metric)."""
+        _, idx = jax.lax.top_k(s.z, top_k)
+        hit = jnp.any(idx == s.y[:, None], axis=-1)
+        return jnp.sum(~hit)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Layout: one subpackage per kernel with
+    kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+    ops.py    — jit'd public wrapper (padding, dtype policy, dispatch)
+    ref.py    — pure-jnp oracle used by tests and by the CPU/dry-run path
+
+The dry-run / roofline path uses the ref implementations so XLA's
+cost_analysis sees every FLOP (Pallas lowers to an opaque custom call on TPU);
+kernels are validated on CPU with interpret=True.
+"""
+from . import flash_attention, power_matvec, rank1_update, wkv6_chunk
+
+__all__ = ["flash_attention", "power_matvec", "rank1_update", "wkv6_chunk"]

@@ -1,0 +1,134 @@
+"""Flash attention (forward) Pallas kernel with GQA and causal masking.
+
+TPU-native design notes (vs. the CUDA flash-attention formulation):
+  - Online-softmax state (running max m, denominator l, accumulator acc) lives
+    in VMEM scratch that persists across the innermost (kv) grid dimension —
+    the TPU analogue of keeping state in registers/shared memory.
+  - Tiles are (block_q x head_dim) and (block_k x head_dim) with head_dim=128
+    so every contraction is MXU-shaped; softmax runs on the VPU in f32.
+  - GQA is resolved in the BlockSpec index maps: q-head h reads kv-head
+    h // (num_q_heads // num_kv_heads) — no K/V repetition in HBM.
+  - Fully-masked causal tiles are skipped with pl.when (no MXU work), which is
+    the TPU version of the CUDA early-exit.
+
+Grid: (batch*q_heads, num_q_blocks, num_kv_blocks), kv innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, block_q: int, block_k: int,
+    kv_len: int, num_kv_blocks: int,
+):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = jk * block_k
+
+    # Causal tile skip: tile is live iff some k_pos <= some q_pos.
+    live = (not causal) or True  # static; runtime guard below
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)  # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)  # (bk, dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < kv_len  # padded kv tail
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            mask = mask & (kpos <= qpos)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if causal:
+        # Tile fully above the diagonal -> no work (dynamic guard on indices).
+        pl.when(k_start <= q_start + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(jk == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "num_q_heads",
+                     "num_kv_heads", "kv_len", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B*Hq, Sq, Dh)   Sq % block_q == 0
+    k: jax.Array,  # (B*Hkv, Skv, Dh) Skv % block_k == 0 (zero-padded ok)
+    v: jax.Array,  # (B*Hkv, Skv, Dh)
+    *,
+    num_q_heads: int,
+    num_kv_heads: int,
+    kv_len: int,  # true (unpadded) kv length for masking
+    scale: float,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, dh = q.shape
+    _, skv, _ = k.shape
+    assert sq % block_q == 0 and skv % block_k == 0
+    group = num_q_heads // num_kv_heads
+    nq, nk = sq // block_q, skv // block_k
+
+    def kv_head(h):  # flat (b*Hq) index -> flat (b*Hkv) index
+        return (h // num_q_heads) * num_kv_heads + (h % num_q_heads) // group
+
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, kv_len=kv_len, num_kv_blocks=nk,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda h, i, j: (kv_head(h), j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda h, i, j: (kv_head(h), j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,48 @@
+"""Public attention op: dispatches Pallas flash kernel (TPU) / jnp ref (else).
+
+Training/dry-run currently use the ref path so XLA cost_analysis sees the
+attention FLOPs (a Pallas call is an opaque custom-call to XLA); the kernel is
+the serving/prefill TPU target, validated in interpret mode on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "block_q", "block_k", "use_pallas", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Sq, Dh)
+    k: jax.Array,  # (B, Hkv, Skv, Dh)
+    v: jax.Array,  # (B, Hkv, Skv, Dh)
+    *,
+    scale: float,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    use = jax.default_backend() == "tpu" if use_pallas is None else use_pallas
+    if not use and not interpret:
+        return ref.attention(q, k, v, scale=scale, causal=causal)
+
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    pq, pk = (-sq) % block_q, (-skv) % block_k
+    qf = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0))).reshape(b * hq, sq + pq, dh)
+    kf = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0))).reshape(b * hkv, skv + pk, dh)
+    vf = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0))).reshape(b * hkv, skv + pk, dh)
+    out = kernel.flash_attention(
+        qf, kf, vf,
+        num_q_heads=hq, num_kv_heads=hkv, kv_len=skv, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out[:, :sq, :].reshape(b, hq, sq, dh)

@@ -1,0 +1,44 @@
+"""Pure-jnp GQA attention oracle (also the XLA path used by dry-runs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(
+    q: jax.Array,  # (B, Hq, Sq, Dh)
+    k: jax.Array,  # (B, Hkv, Skv, Dh)
+    v: jax.Array,  # (B, Hkv, Skv, Dh)
+    *,
+    scale: float,
+    causal: bool = True,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Dense softmax attention with GQA head-group broadcast, f32 softmax.
+
+    ``q_offset`` positions the query block within the kv timeline (decode:
+    q_offset = kv_len - sq)."""
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, sq, dh)
+    # Operands stay in their storage dtype (bf16 on the wire when GSPMD
+    # inserts gathers); accumulation is f32 via preferred_element_type.
+    s = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    )
+    s = s * scale
+    if causal:
+        qpos = q_offset + jnp.arange(sq)[:, None]
+        kpos = jnp.arange(skv)[None, :]
+        s = jnp.where(kpos <= qpos, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, hq, sq, dh).astype(q.dtype)
+
+
+# ``q_offset`` may be a traced scalar (used by the chunked-scan path).
+attention_with_offset_array = attention

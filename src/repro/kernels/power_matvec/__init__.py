@@ -1,0 +1,4 @@
+from . import kernel, ops, ref
+from .ops import matvec, power_iter_step, rmatvec
+
+__all__ = ["kernel", "ops", "ref", "matvec", "rmatvec", "power_iter_step"]

@@ -1,0 +1,87 @@
+"""Public jit'd wrappers: padding, dispatch (Pallas on TPU / ref elsewhere)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _use_pallas(force: bool | None) -> bool:
+    if force is not None:
+        return force
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mult_r: int, mult_c: int) -> jax.Array:
+    n, m = x.shape
+    pr, pc = (-n) % mult_r, (-m) % mult_c
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c", "use_pallas", "interpret"))
+def matvec(
+    a: jax.Array,
+    v: jax.Array,
+    *,
+    block_r: int = 256,
+    block_c: int = 256,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """A @ v -> (n,). Zero-pads to block multiples (zeros are exact no-ops)."""
+    n, m = a.shape
+    if not _use_pallas(use_pallas) and not interpret:
+        return ref.matvec(a, v)[:, 0]
+    ap = _pad_to(a, block_r, block_c)
+    vp = _pad_to(v.reshape(m, 1), block_c, 1)
+    out = kernel.matvec(ap, vp, block_r=block_r, block_c=block_c, interpret=interpret)
+    return out[:n, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c", "use_pallas", "interpret"))
+def rmatvec(
+    a: jax.Array,
+    u: jax.Array,
+    *,
+    block_r: int = 256,
+    block_c: int = 256,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """A^T @ u -> (m,)."""
+    n, m = a.shape
+    if not _use_pallas(use_pallas) and not interpret:
+        return ref.rmatvec(a, u)[:, 0]
+    ap = _pad_to(a, block_r, block_c)
+    up = _pad_to(u.reshape(n, 1), block_r, 1)
+    out = kernel.rmatvec(ap, up, block_r=block_r, block_c=block_c, interpret=interpret)
+    return out[:m, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def power_iter_step(
+    x: jax.Array,
+    r: jax.Array,
+    v: jax.Array,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    """One two-sided power iteration on the implicit gradient A = X^T R.
+
+    Four streaming kernel calls; X and R are each read exactly twice per
+    iteration (information-theoretic minimum for the two-sided step).
+    Returns unit (u, v')."""
+    kw = dict(use_pallas=use_pallas, interpret=interpret)
+    t = matvec(r, v, **kw)
+    u = rmatvec(x, t, **kw)
+    u = u / (jnp.linalg.norm(u) + 1e-30)
+    s = matvec(x, u, **kw)
+    v2 = rmatvec(r, s, **kw)
+    v2 = v2 / (jnp.linalg.norm(v2) + 1e-30)
+    return u, v2

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the power-method matvec kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matvec(a: jax.Array, v: jax.Array) -> jax.Array:
+    """A @ v with f32 accumulation; v:(m,) or (m,1)."""
+    v = v.reshape(a.shape[1], -1)
+    return jnp.dot(a, v, preferred_element_type=jnp.float32)
+
+
+def rmatvec(a: jax.Array, u: jax.Array) -> jax.Array:
+    u = u.reshape(a.shape[0], -1)
+    return jnp.dot(a.T, u, preferred_element_type=jnp.float32)
+
+
+def power_iter_step(x: jax.Array, r: jax.Array, v: jax.Array):
+    """One two-sided power iteration on the implicit MTLS gradient A = X^T R:
+    returns (u, v') unit-normalized. Oracle for ops.power_iter_step."""
+    t = matvec(r, v)  # (n,1)
+    u = rmatvec(x, t)  # (d,1)
+    u = u / (jnp.linalg.norm(u) + 1e-30)
+    s = matvec(x, u)  # (n,1)
+    v2 = rmatvec(r, s)  # (m,1)
+    v2 = v2 / (jnp.linalg.norm(v2) + 1e-30)
+    return u, v2

@@ -1,0 +1,88 @@
+"""Fused FW rank-1 update kernel: Z' = a*Z + b*(x y^T) [+ c*Y0].
+
+Covers every Appendix-B sufficient-information update in one HBM pass:
+  MTLS residual   R <- (1-g)R - g*Y - g*mu (Xu) v^T      (a=1-g, c=-g, b=-g*mu)
+  logistic logits Z <- (1-g)Z - g*mu (Xu) v^T            (a=1-g, b=-g*mu)
+  dense gradient  G <- (1-g)G + g(-mu (XtX u) v^T - XtY) (a=1-g, b=-g*mu, c=-g)
+
+Without fusion this is 3 reads + 1 write of the (n,m) operand (separate
+outer-product materialization + axpy); fused it is (1 or 2) reads + 1 write.
+Tiles are (block_r, block_c) in VMEM; scalars ride in SMEM-style (1,1) blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rank1_kernel(z_ref, x_ref, y_ref, s_ref, o_ref):
+    a, b = s_ref[0, 0], s_ref[1, 0]
+    xy = jnp.dot(x_ref[...], y_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = (a * z_ref[...] + b * xy).astype(o_ref.dtype)
+
+
+def _rank1_axpy_kernel(z_ref, y0_ref, x_ref, y_ref, s_ref, o_ref):
+    a, b, c = s_ref[0, 0], s_ref[1, 0], s_ref[2, 0]
+    xy = jnp.dot(x_ref[...], y_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = (a * z_ref[...] + b * xy + c * y0_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c", "interpret"))
+def rank1_update(
+    z: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    scalars: jax.Array,  # (2,1) f32: [a, b]
+    *,
+    block_r: int = 256,
+    block_c: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    n, m = z.shape
+    assert n % block_r == 0 and m % block_c == 0
+    return pl.pallas_call(
+        _rank1_kernel,
+        grid=(n // block_r, m // block_c),
+        in_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((block_r, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_c, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((2, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), z.dtype),
+        interpret=interpret,
+    )(z, x, y, scalars)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c", "interpret"))
+def rank1_update_axpy(
+    z: jax.Array,
+    y0: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    scalars: jax.Array,  # (3,1) f32: [a, b, c]
+    *,
+    block_r: int = 256,
+    block_c: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    n, m = z.shape
+    assert n % block_r == 0 and m % block_c == 0
+    return pl.pallas_call(
+        _rank1_axpy_kernel,
+        grid=(n // block_r, m // block_c),
+        in_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((block_r, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_c, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((3, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), z.dtype),
+        interpret=interpret,
+    )(z, y0, x, y, scalars)

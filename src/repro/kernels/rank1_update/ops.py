@@ -1,0 +1,60 @@
+"""Public wrappers for the fused rank-1 FW update."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _use_pallas(force):
+    return jax.default_backend() == "tpu" if force is None else force
+
+
+def _pad2(x, br, bc):
+    n, m = x.shape
+    pr, pc = (-n) % br, (-m) % bc
+    return jnp.pad(x, ((0, pr), (0, pc))) if pr or pc else x
+
+
+def _pad1(x, b):
+    n = x.shape[0]
+    p = (-n) % b
+    return jnp.pad(x.reshape(n, 1), ((0, p), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c", "use_pallas", "interpret"))
+def rank1_update(
+    z, x, y, a, b, *, block_r=256, block_c=256, use_pallas=None, interpret=False
+):
+    """Z' = a*Z + b*x y^T, one fused HBM pass on TPU."""
+    n, m = z.shape
+    if not _use_pallas(use_pallas) and not interpret:
+        return ref.rank1_update(z, x, y, a, b)
+    scal = jnp.stack([jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)]).reshape(2, 1)
+    out = kernel.rank1_update(
+        _pad2(z, block_r, block_c), _pad1(x, block_r), _pad1(y, block_c), scal,
+        block_r=block_r, block_c=block_c, interpret=interpret,
+    )
+    return out[:n, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c", "use_pallas", "interpret"))
+def rank1_update_axpy(
+    z, y0, x, y, a, b, c, *, block_r=256, block_c=256, use_pallas=None, interpret=False
+):
+    """Z' = a*Z + b*x y^T + c*Y0 (the MTLS residual update), one fused pass."""
+    n, m = z.shape
+    if not _use_pallas(use_pallas) and not interpret:
+        return ref.rank1_update_axpy(z, y0, x, y, a, b, c)
+    scal = jnp.stack(
+        [jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32), jnp.asarray(c, jnp.float32)]
+    ).reshape(3, 1)
+    out = kernel.rank1_update_axpy(
+        _pad2(z, block_r, block_c), _pad2(y0, block_r, block_c),
+        _pad1(x, block_r), _pad1(y, block_c), scal,
+        block_r=block_r, block_c=block_c, interpret=interpret,
+    )
+    return out[:n, :m]

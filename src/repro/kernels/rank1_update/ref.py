@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused rank-1 update."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rank1_update(z, x, y, a, b):
+    """a*Z + b*outer(x, y), computed in f32, cast back to Z's dtype."""
+    out = a * z.astype(jnp.float32) + b * jnp.outer(
+        x.reshape(-1).astype(jnp.float32), y.reshape(-1).astype(jnp.float32)
+    )
+    return out.astype(z.dtype)
+
+
+def rank1_update_axpy(z, y0, x, y, a, b, c):
+    """a*Z + b*outer(x, y) + c*Y0."""
+    out = (
+        a * z.astype(jnp.float32)
+        + b * jnp.outer(x.reshape(-1).astype(jnp.float32), y.reshape(-1).astype(jnp.float32))
+        + c * y0.astype(jnp.float32)
+    )
+    return out.astype(z.dtype)

@@ -1,0 +1,94 @@
+"""WKV6 chunk-recurrence Pallas kernel — RWKV-6's compute hot spot.
+
+One grid step processes one (batch*head) slice: the whole chunk's r/k/v/decay
+tiles live in VMEM together with the (dk, dv) state, and the intra-chunk
+interaction runs as masked MXU matmuls (the chunked linear-attention form),
+exactly mirroring models/rwkv6.time_mix's math:
+
+    y_t = r_t (S_in decayed to t) + sum_{s<t} (r_t . decayed k_s) v_s
+          + (r_t . u . k_t) v_t
+    S_out = (full-chunk decay) S_in + sum_s (tail-decayed k_s) (x) v_s
+
+Chunk length q and head dims (64) are MXU/VPU-friendly; the factored decay
+exponents are clamped like the jnp path (pairs with >e80 decay round to 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, s_out_ref):
+    r = r_ref[0].astype(jnp.float32)  # (q, dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)  # (q, dv)
+    lw = lw_ref[0].astype(jnp.float32)  # (q, dk), <= 0
+    u = u_ref[0].astype(jnp.float32)  # (1, dk)
+    s0 = s0_ref[0].astype(jnp.float32)  # (dk, dv)
+    q = r.shape[0]
+
+    cw = jnp.cumsum(lw, axis=0)  # inclusive prefix
+    pw = cw - lw  # exclusive prefix
+    # inter-chunk: y_t += (r_t * exp(pw_t)) @ S_in
+    y = jnp.dot(r * jnp.exp(jnp.clip(pw, -80.0, 0.0)), s0,
+                preferred_element_type=jnp.float32)
+    # intra-chunk, strictly lower triangular
+    a = jnp.dot(
+        r * jnp.exp(jnp.clip(pw, -80.0, 0.0)),
+        (k * jnp.exp(jnp.clip(-cw, -80.0, 80.0))).T,
+        preferred_element_type=jnp.float32,
+    )  # (q, q)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    a = jnp.where(si < ti, a, 0.0)
+    y = y + jnp.dot(a, v, preferred_element_type=jnp.float32)
+    # diagonal bonus
+    diag = jnp.sum(r * u * k, axis=-1, keepdims=True)  # (q, 1)
+    y = y + diag * v
+    y_ref[0] = y.astype(y_ref.dtype)
+    # state update
+    tail = jnp.exp(jnp.clip(cw[-1:, :] - cw, -80.0, 0.0))  # (q, dk)
+    s_out = s0 * jnp.exp(jnp.clip(cw[-1, :], -80.0, 0.0))[:, None] + jnp.dot(
+        (k * tail).T, v, preferred_element_type=jnp.float32
+    )
+    s_out_ref[0] = s_out.astype(s_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv6_chunk(
+    r: jax.Array,  # (BH, q, dk)
+    k: jax.Array,
+    v: jax.Array,  # (BH, q, dv)
+    logw: jax.Array,  # (BH, q, dk)
+    u: jax.Array,  # (BH, dk)
+    s0: jax.Array,  # (BH, dk, dv)
+    *,
+    interpret: bool = False,
+):
+    bh, q, dk = r.shape
+    dv = v.shape[-1]
+    y, s_out = pl.pallas_call(
+        _wkv6_kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, q, dk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, dk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, dk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, dk), lambda i: (i, 0)),
+            pl.BlockSpec((1, dk, dv), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, dk, dv), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, q, dv), jnp.float32),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r, k, v, logw, u, s0)
+    return y, s_out

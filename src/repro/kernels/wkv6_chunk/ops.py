@@ -1,0 +1,17 @@
+"""Public wrapper: Pallas on TPU, exact-recurrence reference elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import kernel, ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def wkv6_chunk(r, k, v, logw, u, s0, *, use_pallas=None, interpret=False):
+    """(BH, q, ...) chunk recurrence -> (y (BH,q,dv) f32, s_out (BH,dk,dv) f32)."""
+    use = jax.default_backend() == "tpu" if use_pallas is None else use_pallas
+    if not use and not interpret:
+        return ref.wkv6_chunk_batched(r, k, v, logw, u, s0)
+    return kernel.wkv6_chunk(r, k, v, logw, u, s0, interpret=interpret)

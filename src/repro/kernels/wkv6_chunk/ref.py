@@ -1,0 +1,37 @@
+"""Oracle for the WKV6 chunk kernel: the exact per-token recurrence.
+
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+    y_t = r_t @ (S_{t-1} + diag(u) k_t (x) v_t)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_chunk(
+    r: jax.Array,  # (q, dk)
+    k: jax.Array,  # (q, dk)
+    v: jax.Array,  # (q, dv)
+    logw: jax.Array,  # (q, dk) log decay <= 0
+    u: jax.Array,  # (dk,) bonus
+    s0: jax.Array,  # (dk, dv)
+):
+    """Sequential token-by-token reference. Returns (y (q, dv), s_out)."""
+
+    def step(s, args):
+        rt, kt, vt, lwt = args
+        kv = jnp.outer(kt, vt)
+        y = rt @ (s + u[:, None] * kv)
+        s = s * jnp.exp(lwt)[:, None] + kv
+        return s, y
+
+    s_out, ys = jax.lax.scan(step, s0.astype(jnp.float32),
+                             (r.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), logw.astype(jnp.float32)))
+    return ys, s_out
+
+
+def wkv6_chunk_batched(r, k, v, logw, u, s0):
+    """(BH, q, d*) batched reference via vmap."""
+    return jax.vmap(wkv6_chunk, in_axes=(0, 0, 0, 0, 0, 0))(r, k, v, logw, u, s0)

@@ -1,0 +1,3 @@
+from . import sharding
+
+__all__ = ["sharding"]

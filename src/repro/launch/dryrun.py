@@ -1,0 +1,237 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape x mesh)
+# cell against 512 placeholder CPU devices, then extract the roofline terms
+# from the compiled artifact. The two lines above MUST run before any other
+# import (jax locks the device count at first init).
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.params import param_pspecs  # noqa: E402
+from repro.launch.sharding import pspec, rules_for, use_mesh  # noqa: E402
+from repro.launch.steps import (  # noqa: E402
+    batch_pspecs,
+    cache_pspecs,
+    logits_pspec,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+from repro.models import applicable_shapes, input_specs, lm  # noqa: E402
+from repro.models.config import LM_SHAPES  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+
+
+def count_params(aparams) -> dict:
+    """Total and MoE-active parameter counts from the abstract tree."""
+    total = 0
+    moe_total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(aparams)[0]:
+        names = [getattr(k, "key", None) for k in path]
+        total += leaf.size
+        if "moe" in names and names[-1] != "router":
+            moe_total += leaf.size
+    return {"total": int(total), "moe": int(moe_total)}
+
+
+def model_flops(cfg, params_count: dict, shape) -> float:
+    """Standard 6*N*D (train) / 2*N*D (inference) with MoE active params and
+    the embedding table excluded, attention excluded (the convention)."""
+    n_embed = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    dense_n = params_count["total"] - params_count["moe"] - n_embed
+    if cfg.num_experts:
+        active = params_count["moe"] * cfg.experts_per_token / cfg.num_experts
+    else:
+        active = 0
+    n = dense_n + active
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else 1)
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * n * tokens
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, mesh=None,
+               profile: str = "tp", seq_chunk: int = 0):
+    """Build and lower one cell. Returns (lowered, meta)."""
+    cfg = get_config(arch)
+    if seq_chunk:
+        cfg = dataclasses.replace(cfg, seq_chunk=seq_chunk)
+    shapes = applicable_shapes(cfg)
+    if shape_name not in shapes:
+        raise KeyError(f"{arch} skips {shape_name} (see DESIGN.md §Arch-applicability)")
+    shape = shapes[shape_name]
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+
+    with use_mesh(mesh, rules_for(profile)):
+        aparams = jax.eval_shape(lambda k: lm.init_params(cfg, k), jax.random.PRNGKey(0))
+        pspecs = param_pspecs(aparams)
+        psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+        bspecs = batch_pspecs(cfg, shape)
+        bsh = {k: NamedSharding(mesh, s) for k, s in bspecs.items()}
+        abatch = input_specs(cfg, shape)
+
+        if shape.kind == "train":
+            aopt = jax.eval_shape(adamw.init, aparams)
+            osh = adamw.AdamWState(
+                step=NamedSharding(mesh, P()),
+                m=jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                               is_leaf=lambda x: isinstance(x, P)),
+                v=jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                               is_leaf=lambda x: isinstance(x, P)),
+            )
+            step = make_train_step(cfg)
+            msh = {k: NamedSharding(mesh, P()) for k in ("ce", "aux", "loss", "lr")}
+            fn = jax.jit(
+                step,
+                in_shardings=(psh, osh, bsh),
+                out_shardings=(psh, osh, msh),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(aparams, aopt, abatch)
+
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            if cfg.encoder_only:
+                out_sh = (NamedSharding(mesh, logits_pspec(cfg, shape, full_seq=True)), None)
+            else:
+                csh = {
+                    k: NamedSharding(mesh, s)
+                    for k, s in cache_pspecs(cfg, shape).items()
+                }
+                out_sh = (NamedSharding(mesh, logits_pspec(cfg, shape)), csh)
+            fn = jax.jit(step, in_shardings=(psh, bsh), out_shardings=out_sh)
+            lowered = fn.lower(aparams, abatch)
+
+        else:  # decode
+            acache = lm.cache_specs(cfg, shape.global_batch, shape.seq_len)
+            cspecs = cache_pspecs(cfg, shape)
+            csh = {k: NamedSharding(mesh, s) for k, s in cspecs.items()}
+            step = make_serve_step(cfg)
+            out_sh = (NamedSharding(mesh, logits_pspec(cfg, shape, full_seq=True)), csh)
+            fn = jax.jit(
+                step, in_shardings=(psh, csh, bsh), out_shardings=out_sh,
+                donate_argnums=(1,),
+            )
+            lowered = fn.lower(aparams, acache, abatch)
+
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "profile": profile,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "params": count_params(aparams),
+        "model_flops": model_flops(cfg, count_params(aparams), shape),
+        "global_batch": shape.global_batch,
+        "seq_len": shape.seq_len,
+    }
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Path,
+             mesh=None, tag: str = "", profile: str = "tp",
+             seq_chunk: int = 0) -> dict:
+    t0 = time.time()
+    lowered, meta = lower_cell(
+        arch, shape_name, multi_pod=multi_pod, mesh=mesh, profile=profile,
+        seq_chunk=seq_chunk,
+    )
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    walk = hlo_analysis.analyze(compiled.as_text())
+
+    result = dict(meta)
+    result.update(
+        {
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+            },
+            "cost_analysis": {
+                "flops_body_once": cost.get("flops", 0.0),
+                "bytes_accessed_body_once": cost.get("bytes accessed", 0.0),
+            },
+            "hlo": walk,
+        }
+    )
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{arch}__{shape_name}__{result['mesh']}{tag}.json"
+    (out_dir / name).write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--profile", default="tp", choices=["tp", "sp", "msp"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--seq-chunk", type=int, default=0)
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    out_dir = Path(args.out)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch in archs:
+            cfg = get_config(arch)
+            shapes = applicable_shapes(cfg)
+            names = list(shapes) if args.shape == "all" else [args.shape]
+            for shape_name in names:
+                if shape_name not in shapes:
+                    print(f"SKIP {arch} {shape_name} (inapplicable)")
+                    continue
+                t0 = time.time()
+                try:
+                    res = run_cell(
+                        arch, shape_name, multi_pod=multi_pod, out_dir=out_dir,
+                        mesh=mesh, profile=args.profile, tag=args.tag,
+                        seq_chunk=args.seq_chunk,
+                    )
+                    print(
+                        f"OK   {arch:24s} {shape_name:12s} {res['mesh']:10s} "
+                        f"compile={res['compile_s']:7.1f}s "
+                        f"flops/dev={res['hlo']['flops']:.3e} "
+                        f"coll={res['hlo']['collective_bytes_total']:.3e}B "
+                        f"temp={res['memory']['temp_bytes']/2**30:.2f}GiB"
+                    )
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape_name, multi_pod, repr(e)))
+                    print(f"FAIL {arch} {shape_name} multi_pod={multi_pod}: {e}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

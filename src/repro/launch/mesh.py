@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Single pod : (16, 16)   ("data", "model")  = 256 chips (TPU v5e pod)
+Multi-pod  : (2, 16, 16)("pod", "data", "model") = 512 chips, "pod" over DCN.
+
+Functions (not module constants) so importing never touches device state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, found {len(devices)} — dryrun.py must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import"
+        )
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> jax.sharding.Mesh:
+    """Arbitrary mesh over the first prod(shape) devices (tests, elasticity)."""
+    n = math.prod(shape)
+    dev = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+# TPU v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+DCN_BW = 25e9  # B/s per host, assumed for the "pod" axis

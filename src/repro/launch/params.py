@@ -1,0 +1,100 @@
+"""Parameter PartitionSpec assignment by pytree path.
+
+Logical layout (mapped to mesh axes by launch.sharding rules):
+  in-projections  (.., D_in, D_out_tp)  -> (..., fsdp, model)   Megatron col
+  out-projections (.., D_in_tp, D_out)  -> (..., model, fsdp)   Megatron row
+  embedding       (V, D)                -> (vocab, fsdp)
+  unembedding     (D, V)                -> (fsdp, vocab)
+  MoE experts     (E, D, F)/(E, F, D)   -> (expert, fsdp, None)  EP x ZeRO-3
+  biases          (D_out_tp,)           -> (model,)
+  norms / scalars / small tables        -> replicated
+Stacked-layer leading dims get None prepended automatically.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .sharding import pspec
+
+# leaf-name -> (trailing logical dims)
+_IN_PROJ = ("fsdp", "heads")  # heads/mlp/vocab all map to "model" by default
+_RULES: Dict[str, Tuple] = {
+    # attention / generic in-projections (col-parallel)
+    "wq": ("fsdp", "heads"),
+    "wk": ("fsdp", "kv_heads"),
+    "wv": ("fsdp", "kv_heads"),
+    "wg": ("fsdp", "mlp"),
+    "wu": ("fsdp", "mlp"),
+    "w1": ("fsdp", "mlp"),
+    "wr": ("fsdp", "mlp"),
+    "ck": ("fsdp", "mlp"),
+    "cr": ("fsdp", "mlp"),
+    "w_in": ("fsdp", "mlp"),
+    "w_lora_a": ("fsdp", None),
+    # out-projections (row-parallel)
+    "wo": ("heads", "fsdp"),
+    "wd": ("mlp", "fsdp"),
+    "w2": ("mlp", "fsdp"),
+    "cv": ("mlp", "fsdp"),
+    "w_out": ("mlp", "fsdp"),
+    "w_lora_b": (None, "fsdp"),
+    # embeddings
+    "embed": ("vocab", "fsdp_embed"),
+    "unembed": ("fsdp_embed", "vocab"),
+    "frame_proj": (None, "fsdp_embed"),
+    # biases
+    "bq": ("heads",),
+    "bk": ("kv_heads",),
+    "bv": ("kv_heads",),
+    # mamba conv (channel dim model-sharded)
+    "conv_w": (None, "mlp"),
+    "conv_b": ("mlp",),
+}
+
+# MoE expert tensors: (E, D, F) or (E, F, D); dim1 is the dim gathered
+# (ZeRO-3) inside the shard_map MoE, dim0 is expert-parallel.
+_MOE_RULES: Dict[str, Tuple] = {
+    "wg": ("expert", "fsdp", None),
+    "wu": ("expert", "fsdp", None),
+    "wd": ("expert", "fsdp", None),
+    "router": (None, None),
+}
+
+
+def _leaf_spec(path, leaf) -> P:
+    from .sharding import axes_size
+
+    names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    leaf_name = names[-1]
+    in_moe = "moe" in names[:-1]
+    rules = _MOE_RULES if in_moe and leaf_name in _MOE_RULES else _RULES
+    trailing = rules.get(leaf_name)
+    if trailing is None:
+        return P()  # replicated (norms, gates, scalars, decay tables)
+    pad = leaf.ndim - len(trailing)
+    if pad < 0:
+        return P()
+    logical = [None] * pad + list(trailing)
+    # pjit in_shardings must divide exactly (e.g. hubert's 504-way vocab on a
+    # 16-way axis): drop the annotation for non-dividing dims.
+    for i, name in enumerate(logical):
+        if name is not None and leaf.shape[i] % max(axes_size(name), 1) != 0:
+            logical[i] = None
+    return pspec(*logical)
+
+
+def param_pspecs(abstract_params: Any) -> Any:
+    """PartitionSpec pytree for a (possibly abstract) param pytree, resolved
+    under the ACTIVE mesh/rules (call inside use_mesh)."""
+    return jax.tree_util.tree_map_with_path(_leaf_spec, abstract_params)
+
+
+def param_shardings(mesh: Mesh, abstract_params: Any) -> Any:
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_pspecs(abstract_params),
+        is_leaf=lambda x: isinstance(x, P),
+    )

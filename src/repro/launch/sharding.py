@@ -1,0 +1,177 @@
+"""Logical-axis sharding rules and the mesh context used by the model zoo.
+
+Models annotate tensors with *logical* dim names; the active rule set maps
+them to mesh axes. Outside a mesh context every annotation is a no-op, so the
+exact same model code runs single-device smoke tests and 512-chip dry-runs.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+# Logical dim -> mesh axes. "fsdp" axes also carry the batch (ZeRO-3 style).
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "batch_tp": ("pod", "data", "model"),  # batch over ALL axes (attention
+    # fallback when head counts don't divide the model axis)
+    "fsdp": ("pod", "data"),  # weight dim sharded over the DP axes
+    "fsdp_embed": ("pod", "data"),  # embed/unembed weight dim (never "model",
+    # which already carries their vocab dim)
+    "seq": "data",  # context/sequence parallelism (long-context decode)
+    "seq_tp": "model",  # KV-cache seq dim when kv-heads don't divide TP
+    "seq_act": None,  # activation seq dim between blocks (SP profile: model)
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "embed": None,  # d_model dim of activations: replicated
+    "state": None,
+}
+
+# Sharding profiles. "tp" = Megatron tensor parallelism on the model axis
+# (default). "sp" = sequence parallelism: activations are sharded on the
+# SEQUENCE dim over the model axis, heads/mlp run locally, and parameters are
+# ZeRO-3 sharded over every axis — eliminates the per-layer activation
+# all-reduces entirely (the dominant baseline cost; see EXPERIMENTS.md §Perf).
+PROFILES: Dict[str, Dict[str, Axis]] = {
+    "tp": {},
+    "sp": {
+        "heads": None,
+        "kv_heads": None,
+        "mlp": None,
+        "seq_act": "model",
+        "fsdp": ("pod", "data", "model"),
+    },
+    # Megatron-style SP: TP inside blocks, sequence-sharded residual stream
+    # between blocks (AG/RS pairs replace the activation all-reduces).
+    "msp": {"seq_act": "model"},
+}
+
+
+def rules_for(profile: str) -> Dict[str, Axis]:
+    rules = dict(DEFAULT_RULES)
+    rules.update(PROFILES[profile])
+    return rules
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, Axis] = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[Dict[str, Axis]] = None):
+    """Activate a mesh + rule set for model tracing (and jax's mesh context)."""
+    prev_mesh, prev_rules = _CTX.mesh, _CTX.rules
+    _CTX.mesh = mesh
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    _CTX.rules = merged
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev_mesh, prev_rules
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _resolve(logical: Sequence[Optional[str]]) -> P:
+    axes_in_mesh = set(_CTX.mesh.axis_names) if _CTX.mesh is not None else set()
+    out = []
+    used: set = set()  # a mesh axis may appear at most once per spec; under
+    # mixed profiles (e.g. msp: heads AND seq_act -> model) the EARLIER
+    # logical dim wins and later mentions resolve to None.
+    for name in logical:
+        ax = _CTX.rules.get(name) if name else None
+        if ax is None:
+            out.append(None)
+            continue
+        if isinstance(ax, str):
+            ax = (ax,)
+        ax = tuple(a for a in ax if a in axes_in_mesh and a not in used)
+        used.update(ax)
+        out.append(ax if len(ax) > 1 else (ax[0] if ax else None))
+    return P(*out)
+
+
+def pspec(*logical: Optional[str]) -> P:
+    """PartitionSpec for the given logical dims under the active rules."""
+    return _resolve(logical)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under the active mesh; identity without one."""
+    if _CTX.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, _resolve(logical))
+    )
+
+
+def named_sharding(*logical: Optional[str]) -> Optional[NamedSharding]:
+    if _CTX.mesh is None:
+        return None
+    return NamedSharding(_CTX.mesh, _resolve(logical))
+
+
+def data_axes() -> Tuple[str, ...]:
+    """Mesh axes carrying the batch (for psums in manual-collective regions)."""
+    ax = _CTX.rules.get("batch")
+    if ax is None or _CTX.mesh is None:
+        return ()
+    if isinstance(ax, str):
+        ax = (ax,)
+    return tuple(a for a in ax if a in _CTX.mesh.axis_names)
+
+
+def axes_size(logical: str) -> int:
+    """Product of mesh-axis sizes a logical dim maps to (1 without a mesh)."""
+    if _CTX.mesh is None:
+        return 1
+    ax = _CTX.rules.get(logical)
+    if ax is None:
+        return 1
+    if isinstance(ax, str):
+        ax = (ax,)
+    n = 1
+    for a in ax:
+        if a in _CTX.mesh.axis_names:
+            n *= _CTX.mesh.shape[a]
+    return n
+
+
+def seq_axes() -> Tuple[str, ...]:
+    """Mesh axes carrying the sequence dim (context parallelism)."""
+    ax = _CTX.rules.get("seq")
+    if ax is None or _CTX.mesh is None:
+        return ()
+    if isinstance(ax, str):
+        ax = (ax,)
+    return tuple(a for a in ax if a in _CTX.mesh.axis_names)
+
+
+def model_axes() -> Tuple[str, ...]:
+    ax = _CTX.rules.get("expert")
+    if ax is None or _CTX.mesh is None:
+        return ()
+    if isinstance(ax, str):
+        ax = (ax,)
+    return tuple(a for a in ax if a in _CTX.mesh.axis_names)

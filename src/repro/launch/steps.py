@@ -1,0 +1,159 @@
+"""jit-able train / prefill / serve steps + their input/output shardings.
+
+These are the functions the dry-run lowers for every (arch x shape x mesh)
+cell and the drivers (train.py / serve.py) execute for real.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+from repro.models.config import ModelConfig, ShapeSpec, input_specs
+from repro.optim import adamw, schedule
+
+from .params import param_pspecs
+from .sharding import pspec
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, *, peak_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10000):
+    def train_step(params, opt_state: adamw.AdamWState, batch):
+        (loss, metrics), grads = jax.value_and_grad(lm.loss_fn, has_aux=True)(
+            params, batch, cfg
+        )
+        lr = schedule.cosine_with_warmup(
+            opt_state.step, peak_lr=peak_lr, warmup=warmup, total=total_steps
+        )
+        params, opt_state = adamw.update(grads, opt_state, params, lr=lr)
+        metrics = dict(metrics, loss=loss, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    if cfg.encoder_only:  # no KV cache; "prefill" = full encoder forward
+        def encode_step(params, batch):
+            out = lm.forward(params, batch, cfg, mode="train")
+            return out["logits"], None
+
+        return encode_step
+
+    def prefill_step(params, batch):
+        out = lm.forward(params, batch, cfg, mode="prefill")
+        last = out["logits"][:, -1, :]
+        return last, out.get("cache")
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, batch):
+        return lm.decode_step(params, cache, batch, cfg)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Shardings for the non-param inputs
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, P]:
+    """PartitionSpecs matching models.config.input_specs (call inside use_mesh).
+
+    If the global batch does not divide the batch mesh axes (bs=1 long-context
+    decode), the batch dim is replicated — sequence/context parallelism takes
+    over via cache_pspecs."""
+    from .sharding import active_mesh, data_axes
+
+    mesh = active_mesh()
+    n_batch_shards = 1
+    for a in data_axes():
+        n_batch_shards *= mesh.shape[a] if mesh else 1
+    b_axis = "batch" if shape.global_batch % max(n_batch_shards, 1) == 0 else None
+
+    specs = {}
+    for name in input_specs(cfg, shape):
+        if name in ("tokens", "labels"):
+            specs[name] = pspec(b_axis, None)
+        elif name == "frames":
+            specs[name] = pspec(b_axis, None, None)
+        elif name == "vision_embeds":
+            specs[name] = pspec(b_axis, None, "embed")
+        elif name == "positions":
+            specs[name] = pspec(b_axis, None, None)
+        elif name == "cache_pos":
+            specs[name] = pspec()
+        else:
+            raise KeyError(name)
+    return specs
+
+
+def logits_pspec(cfg: ModelConfig, shape: ShapeSpec, *, full_seq: bool = False) -> P:
+    """Output-logits sharding, batch/vocab-divisibility aware."""
+    from .sharding import active_mesh, axes_size, data_axes
+
+    mesh = active_mesh()
+    n = 1
+    for a in data_axes():
+        n *= mesh.shape[a] if mesh else 1
+    b_axis = "batch" if shape.global_batch % max(n, 1) == 0 else None
+    v_axis = "vocab" if cfg.vocab_size % max(axes_size("vocab"), 1) == 0 else None
+    if full_seq:
+        return pspec(b_axis, None, v_axis)
+    return pspec(b_axis, v_axis)
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, P]:
+    """Decode-cache shardings. bs==1 (long-context): shard the SEQUENCE dim of
+    the KV cache over the data axes (flash-decode combine handles softmax);
+    otherwise shard the batch dim."""
+    from .sharding import axes_size
+
+    seq_sharded = shape.global_batch == 1
+    b = None if seq_sharded else "batch"
+    # pjit in/out shardings must divide exactly: kv-head dim only when it
+    # divides the model axis, else shard the cache's seq dim over the model
+    # axis instead ("seq_tp") so the cache still spreads across all chips.
+    kv_div = cfg.num_kv_heads % max(axes_size("kv_heads"), 1) == 0
+    kv_h = "kv_heads" if kv_div else None
+    if seq_sharded:
+        kv_s = "seq"
+    else:
+        kv_s = None if kv_div else "seq_tp"
+    table = {
+        # (L, B, Hkv, S, Dh)
+        "k": pspec(None, b, kv_h, kv_s, None),
+        "v": pspec(None, b, kv_h, kv_s, None),
+        # (L, B, nh, hd, N) SSM state: heads over TP
+        "mamba_h": pspec(None, b, "heads", None, None),
+        # (L, B, K-1, conv_dim): conv channels over TP
+        "mamba_conv": pspec(None, b, None, "mlp"),
+        # (L, B, H, dk, dv) wkv state: heads over TP
+        "s": pspec(None, b, "heads", None, None),
+        # (L, B, D) token-shift carries
+        "x_tm": pspec(None, b, None),
+        "x_cm": pspec(None, b, None),
+    }
+    return {name: table[name] for name in lm.cache_specs(cfg, 1, 8)}
+
+
+def train_state_specs(cfg: ModelConfig):
+    """(abstract_params, abstract_opt, param_specs, opt_specs) under the
+    active mesh."""
+    aparams = jax.eval_shape(lambda k: lm.init_params(cfg, k), jax.random.PRNGKey(0))
+    pspecs = param_pspecs(aparams)
+    aopt = jax.eval_shape(adamw.init, aparams)
+    ospecs = adamw.AdamWState(step=P(), m=pspecs, v=pspecs)
+    return aparams, aopt, pspecs, ospecs

@@ -1,0 +1,16 @@
+from . import config, layers, lm, mamba2, moe, rwkv6
+from .config import LM_SHAPES, ModelConfig, ShapeSpec, applicable_shapes, input_specs
+
+__all__ = [
+    "config",
+    "layers",
+    "lm",
+    "mamba2",
+    "moe",
+    "rwkv6",
+    "LM_SHAPES",
+    "ModelConfig",
+    "ShapeSpec",
+    "applicable_shapes",
+    "input_specs",
+]

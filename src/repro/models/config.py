@@ -1,0 +1,172 @@
+"""Model / shape configuration for the architecture zoo.
+
+One frozen dataclass covers all 10 assigned families; family-specific fields
+default to inert values. Exact per-arch instantiations live in
+``repro/configs/<arch>.py`` (plus a reduced smoke variant each).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | vlm | audio | hybrid | ssm
+    num_layers: int
+    d_model: int
+    num_heads: int  # 0 for attention-free (rwkv6)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_dense_residual: bool = False  # arctic: dense FFN in parallel w/ MoE
+    moe_capacity_factor: float = 1.25
+    moe_dense_ff: int = 0  # arctic residual MLP width (defaults to d_ff)
+
+    # attention details
+    mlp_type: str = "swiglu"  # swiglu | gelu
+    qkv_bias: bool = False  # qwen family
+    rope_theta: float = 1e4
+    causal: bool = True  # False for encoder-only (hubert)
+    mrope_sections: Tuple[int, ...] = ()  # qwen2-vl M-RoPE (t, h, w) splits
+
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    d_conv: int = 4
+    hybrid_block: int = 0  # zamba2: mamba layers per shared-attention call
+
+    # frontends (vlm/audio stubs)
+    frontend_dim: int = 0  # audio: raw frame feature dim
+    vision_tokens: int = 0  # vlm: patches per train/prefill sequence
+
+    tie_embeddings: bool = False  # qwen2-1.5b ties embed/unembed
+
+    # numerics / execution
+    dtype: str = "bfloat16"
+    remat: str = "full"  # none | full | dots
+    seq_chunk: int = 2048  # chunked-attention q block
+    ssm_chunk: int = 256  # SSD / WKV chunk length
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim_(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def jnp_dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    def validate(self) -> None:
+        if not self.attention_free:
+            assert self.num_heads % max(self.num_kv_heads, 1) == 0
+        if self.family in ("moe",):
+            assert self.num_experts > 0 and self.experts_per_token > 0
+        if self.family == "hybrid":
+            assert self.ssm_state > 0 and self.hybrid_block > 0
+            assert self.num_layers % self.hybrid_block == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One input-shape cell. kind:
+    - train:   lower train_step  (tokens + labels, seq_len positions)
+    - prefill: lower prefill_step (forward + KV-cache build)
+    - decode:  lower serve_step  (1 new token against a seq_len-long cache)
+    """
+
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+LM_SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> Dict[str, ShapeSpec]:
+    """Shape cells that are well-defined for this architecture.
+
+    Skips (recorded in DESIGN.md §Arch-applicability):
+      - encoder-only (hubert): no decode step -> skip decode_32k, long_500k
+      - pure full-attention archs: long_500k needs sub-quadratic attention ->
+        run only for ssm/hybrid families.
+    """
+    out = dict(LM_SHAPES)
+    if cfg.encoder_only:
+        out.pop("decode_32k")
+        out.pop("long_500k")
+    elif cfg.family not in ("ssm", "hybrid"):
+        out.pop("long_500k")
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    [vlm]/[audio] give the transformer BACKBONE only; the modality frontend is
+    a stub supplying precomputed patch/frame embeddings per the assignment.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), jnp.float32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.family == "vlm":
+            sv = cfg.vision_tokens
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - sv), i32)
+            specs["vision_embeds"] = jax.ShapeDtypeStruct((b, sv, cfg.d_model), jnp.float32)
+            specs["positions"] = jax.ShapeDtypeStruct((b, 3, s), i32)  # M-RoPE (t,h,w)
+        return specs
+
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            return {"frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), jnp.float32)}
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            sv = cfg.vision_tokens
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - sv), i32)
+            specs["vision_embeds"] = jax.ShapeDtypeStruct((b, sv, cfg.d_model), jnp.float32)
+            specs["positions"] = jax.ShapeDtypeStruct((b, 3, s), i32)
+        return specs
+
+    # decode: one new token; the cache spec is built by models.lm.cache_specs.
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "cache_pos": jax.ShapeDtypeStruct((), i32),
+    }
+    if cfg.family == "vlm":
+        specs["positions"] = jax.ShapeDtypeStruct((b, 3, 1), i32)
+    return specs

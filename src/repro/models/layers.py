@@ -1,0 +1,327 @@
+"""Shared transformer layers: norms, RoPE/M-RoPE, GQA attention, MLPs.
+
+All functions are parameter-dict based (no framework dependency) and annotate
+activations/params with logical sharding dims via launch.sharding.shard — a
+no-op outside a mesh context so smoke tests and dry-runs share one code path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.kernels.flash_attention import ref as attn_ref
+from repro.launch.sharding import axes_size, data_axes, seq_axes, shard
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE for qwen2-vl)
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(
+    positions: jax.Array,  # (B, S) int
+    head_dim: int,
+    theta: float,
+) -> jax.Array:
+    """(B, S, head_dim/2) rotation angles."""
+    half = head_dim // 2
+    inv_freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return positions[..., None].astype(jnp.float32) * inv_freq
+
+
+def mrope_angles(
+    positions: jax.Array,  # (B, 3, S) int — (temporal, height, width) ids
+    head_dim: int,
+    theta: float,
+    sections: Tuple[int, ...],
+) -> jax.Array:
+    """Qwen2-VL M-RoPE: the half-dim frequency slots are partitioned into
+    (t, h, w) sections, each rotating by its own position stream."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv_freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=half
+    )  # (half,) in {0,1,2}
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        sec_id[None, :, None].repeat(positions.shape[0], 0),
+        axis=1,
+    )  # (B, half, S)
+    return jnp.einsum("bhs,h->bsh", pos, inv_freq)
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: (B, H, S, Dh); angles: (B, S, Dh/2). Split-half rotation."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[:, None].astype(x.dtype)
+    sin = jnp.sin(angles)[:, None].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA). Three execution paths:
+#   dense   — small seq (smoke tests)
+#   chunked — scan over q chunks, O(chunk * S) live memory (train/prefill 32k)
+#   decode  — 1 query vs cache; optional sequence-sharded flash-decode combine
+# ---------------------------------------------------------------------------
+
+
+def _expand_heads(kv: jax.Array, hq: int) -> jax.Array:
+    """Broadcast KV heads to the q-head count and constrain on 'heads'.
+
+    Keeping score/attention einsums on a single consistently-'heads'-sharded
+    dim avoids the (hkv, group) reshape that the SPMD partitioner cannot
+    shard when hkv doesn't divide the model axis (it would replicate whole
+    score tensors). The repeat is cheap (K/V << scores)."""
+    b, hkv, s, dh = kv.shape
+    if hkv != hq:
+        kv = jnp.repeat(kv, hq // hkv, axis=1)
+    return shard(kv, "batch", "heads", None, None)
+
+
+def _dense_attention(q, k, v, *, scale, causal, q_offset=0):
+    hq = q.shape[1]
+    return attn_ref.attention(
+        q, _expand_heads(k, hq), _expand_heads(v, hq),
+        scale=scale, causal=causal, q_offset=q_offset,
+    )
+
+
+def _chunked_attention(q, k, v, *, scale, causal, chunk: int):
+    """lax.scan over q chunks; each chunk sees the full K/V with masking.
+    Memory: O(B * H * chunk * S) transient scores (rematerialized per chunk)."""
+    b, h, s, dh = q.shape
+    nchunks = s // chunk
+    k = _expand_heads(k, h)
+    v = _expand_heads(v, h)
+
+    qc = q.reshape(b, h, nchunks, chunk, dh).transpose(2, 0, 1, 3, 4)
+
+    @jax.checkpoint
+    def one_chunk(carry, args):
+        i, qi = args  # qi: (B, H, chunk, Dh)
+        out = attn_ref.attention_with_offset_array(
+            qi, k, v, scale=scale, causal=causal, q_offset=i * chunk
+        )
+        return carry, out
+
+    _, outs = jax.lax.scan(one_chunk, None, (jnp.arange(nchunks), qc))
+    return outs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, dh)
+
+
+def attention(
+    q: jax.Array,  # (B, Hq, Sq, Dh)
+    k: jax.Array,  # (B, Hkv, Skv, Dh)
+    v: jax.Array,
+    *,
+    scale: float,
+    causal: bool,
+    q_offset=0,
+    chunk: int = 2048,
+    use_pallas: Optional[bool] = None,
+) -> jax.Array:
+    """Dispatch: Pallas flash kernel on TPU, chunked-scan XLA elsewhere for
+    long sequences, dense for short ones."""
+    sq = q.shape[2]
+    use = jax.default_backend() == "tpu" if use_pallas is None else use_pallas
+    if use and sq > 1 and q_offset == 0:
+        return attn_ops.flash_attention(q, k, v, scale=scale, causal=causal)
+    if sq > chunk and sq % chunk == 0 and q_offset == 0:
+        return _chunked_attention(q, k, v, scale=scale, causal=causal, chunk=chunk)
+    return _dense_attention(q, k, v, scale=scale, causal=causal, q_offset=q_offset)
+
+
+def decode_attention_seq_sharded(
+    q: jax.Array,  # (B, Hq, 1, Dh) replicated over the data axes
+    k: jax.Array,  # (B, Hkv, S, Dh) sharded on S over the data axes
+    v: jax.Array,
+    *,
+    scale: float,
+    cache_pos: jax.Array,  # () int — #valid cache entries
+    mesh,
+) -> jax.Array:
+    """Flash-decode for long-context (bs=1): the KV cache is sharded along the
+    sequence dim; each shard computes a partial softmax (m_j, l_j, acc_j) and
+    the combine is two O(B*H*Dh) psums — never an S-length all-gather.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    axes = seq_axes()
+    assert axes, "seq-sharded decode requires a data axis"
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    s_loc = k.shape[2] // n_shards
+
+    def partial_attn(q_, k_, v_):
+        idx = jnp.int32(0)  # linear index over the seq axes
+        for a in axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        start = idx * s_loc
+        kpos = start + jnp.arange(s_loc)
+        sres = jnp.einsum(
+            "bhqd,bhkd->bhqk",
+            q_.astype(jnp.float32),
+            _expand_kv(k_, q_.shape[1]).astype(jnp.float32),
+        ) * scale
+        mask = (kpos < cache_pos)[None, None, None, :]
+        sres = jnp.where(mask, sres, -1e30)
+        m = jnp.max(sres, axis=-1, keepdims=True)
+        p = jnp.exp(sres - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        acc = jnp.einsum("bhqk,bhkd->bhqd", p, _expand_kv(v_, q_.shape[1]).astype(jnp.float32))
+        # global online-softmax combine
+        m_g = jax.lax.pmax(m, axes)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, axes)
+        acc_g = jax.lax.psum(acc * corr, axes)
+        return (acc_g / jnp.maximum(l_g, 1e-30)).astype(q_.dtype)
+
+    sax = axes if len(axes) > 1 else axes[0]
+    return jax.shard_map(
+        partial_attn,
+        mesh=mesh,
+        in_specs=(P(), P(None, None, sax, None), P(None, None, sax, None)),
+        out_specs=P(),
+        check_vma=False,
+    )(q, k, v)
+
+
+def _expand_kv(kv: jax.Array, hq: int) -> jax.Array:
+    """(B, Hkv, S, Dh) -> (B, Hkv, S, Dh) kept as-is; helper reshapes q-side
+    grouping. Here we instead broadcast kv heads to q heads for plain einsum."""
+    b, hkv, s, dh = kv.shape
+    if hkv == hq:
+        return kv
+    return jnp.repeat(kv, hq // hkv, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (QKV proj + rope + attention + out proj)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, dtype) -> Params:
+    d, hq, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = d**-0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, hq * dh), dtype) * std,
+        "wk": jax.random.normal(k2, (d, hkv * dh), dtype) * std,
+        "wv": jax.random.normal(k3, (d, hkv * dh), dtype) * std,
+        "wo": jax.random.normal(k4, (hq * dh, d), dtype) * std,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def attention_block(
+    p: Params,
+    x: jax.Array,  # (B, S, D)
+    cfg,
+    *,
+    angles: Optional[jax.Array],  # rope angles for current positions
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (k,v): (B,Hkv,Smax,Dh)
+    cache_pos=None,  # () int32: write offset / #valid entries
+    mesh=None,
+    seq_sharded_cache: bool = False,
+    return_kv: bool = False,  # prefill: emit this layer's (k, v) as the cache
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+
+    # Sharding-constraint policy: activations may be PADDED by XLA when a dim
+    # doesn't divide the axis (legal for internal constraints, unlike pjit
+    # in/out shardings), but constraining the small KV head dim (e.g. 8 on a
+    # 16-way axis) invites bad propagation — keep K/V model-replicated then
+    # (they're tiny next to scores) and let the q-head dim carry the TP.
+    kv_l = "kv_heads" if hkv % max(axes_size("kv_heads"), 1) == 0 else None
+
+    q = x @ p["wq"] + (p.get("bq", 0))
+    kk = x @ p["wk"] + (p.get("bk", 0))
+    vv = x @ p["wv"] + (p.get("bv", 0))
+    q = shard(q.reshape(b, s, hq, dh).transpose(0, 2, 1, 3), "batch", "heads", "seq_act", None)
+    kk = shard(kk.reshape(b, s, hkv, dh).transpose(0, 2, 1, 3), "batch", kv_l, None, None)
+    vv = shard(vv.reshape(b, s, hkv, dh).transpose(0, 2, 1, 3), "batch", kv_l, None, None)
+
+    if angles is not None:
+        q = apply_rope(q, angles)
+        kk = apply_rope(kk, angles)
+
+    scale = dh**-0.5
+    new_cache = None
+    if cache is None:
+        out = attention(q, kk, vv, scale=scale, causal=cfg.causal, chunk=cfg.seq_chunk)
+        if return_kv:
+            new_cache = (kk, vv)
+    elif s > 1:
+        raise NotImplementedError("chunked prefill-into-cache not needed here")
+    else:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice(ck, kk.astype(ck.dtype), (0, 0, cache_pos, 0))
+        cv = jax.lax.dynamic_update_slice(cv, vv.astype(cv.dtype), (0, 0, cache_pos, 0))
+        new_cache = (ck, cv)
+        if seq_sharded_cache and mesh is not None:
+            out = decode_attention_seq_sharded(
+                q, ck, cv, scale=scale, cache_pos=cache_pos + 1, mesh=mesh
+            )
+        else:
+            out = _dense_attention(
+                q, ck, cv, scale=scale, causal=True, q_offset=cache_pos
+            )
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+    out = out @ p["wo"]
+    return shard(out, "batch", "seq_act", "embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, f: int, kind: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    std = d**-0.5
+    if kind == "swiglu":
+        return {
+            "wg": jax.random.normal(ks[0], (d, f), dtype) * std,
+            "wu": jax.random.normal(ks[1], (d, f), dtype) * std,
+            "wd": jax.random.normal(ks[2], (f, d), dtype) * (f**-0.5),
+        }
+    return {  # gelu
+        "w1": jax.random.normal(ks[0], (d, f), dtype) * std,
+        "w2": jax.random.normal(ks[1], (f, d), dtype) * (f**-0.5),
+    }
+
+
+def mlp_block(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+        h = shard(h, "batch", "seq_act", "mlp")
+        return shard(h @ p["wd"], "batch", "seq_act", "embed")
+    h = jax.nn.gelu(x @ p["w1"])
+    h = shard(h, "batch", "seq_act", "mlp")
+    return shard(h @ p["w2"], "batch", "seq_act", "embed")

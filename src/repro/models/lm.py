@@ -1,0 +1,490 @@
+"""Unified language-model zoo: init / forward / loss / decode for all families.
+
+Families:
+  dense | moe | vlm | audio  — (pre-norm GQA transformer; MoE swaps the FFN;
+                                vlm/audio differ only in the input frontend)
+  hybrid                     — zamba2: stacks of Mamba2 layers with one SHARED
+                                attention+MLP block applied every
+                                ``hybrid_block`` layers (9 applications)
+  ssm                        — rwkv6: time-mix + channel-mix, attention-free
+
+Layers run under lax.scan over stacked parameters (compact HLO, fast SPMD
+compiles); remat policy per config. Everything is parameter-dict based.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import active_mesh, shard
+
+from . import layers as L
+from . import mamba2, moe, rwkv6
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(fn, key, n: int):
+    """vmap a per-layer init over n layer keys -> stacked (n, ...) params."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    cfg.validate()
+    dt = cfg.jnp_dtype
+    d = cfg.d_model
+    keys = jax.random.split(key, 8)
+    p: Params = {}
+
+    if cfg.family == "audio":
+        p["frame_proj"] = (
+            jax.random.normal(keys[0], (cfg.frontend_dim, d), dt) * cfg.frontend_dim**-0.5
+        )
+    p["embed"] = jax.random.normal(keys[1], (cfg.vocab_size, d), dt) * d**-0.5
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+
+        def one_layer(k):
+            k1, k2 = jax.random.split(k)
+            lp = {
+                "ln1": jnp.ones((d,), dt),
+                "attn": L.init_attention(k1, cfg, dt),
+                "ln2": jnp.ones((d,), dt),
+            }
+            if cfg.family == "moe":
+                lp["moe"] = moe.init_moe(k2, cfg, dt)
+                if cfg.moe_dense_residual:
+                    k3 = jax.random.fold_in(k2, 1)
+                    lp["mlp"] = L.init_mlp(
+                        k3, d, cfg.moe_dense_ff or cfg.d_ff, cfg.mlp_type, dt
+                    )
+            else:
+                lp["mlp"] = L.init_mlp(k2, d, cfg.d_ff, cfg.mlp_type, dt)
+            return lp
+
+        p["layers"] = _stack_init(one_layer, keys[2], cfg.num_layers)
+
+    elif cfg.family == "hybrid":
+
+        def one_mamba(k):
+            return {"ln": jnp.ones((d,), dt), "mamba": mamba2.init_mamba(k, cfg, dt)}
+
+        p["layers"] = _stack_init(one_mamba, keys[2], cfg.num_layers)
+        k1, k2 = jax.random.split(keys[3])
+        p["shared"] = {
+            "ln1": jnp.ones((d,), dt),
+            "attn": L.init_attention(k1, cfg, dt),
+            "ln2": jnp.ones((d,), dt),
+            "mlp": L.init_mlp(k2, d, cfg.d_ff, cfg.mlp_type, dt),
+        }
+
+    elif cfg.family == "ssm":
+
+        def one_rwkv(k):
+            return {
+                "ln1": jnp.ones((d,), dt),
+                "ln2": jnp.ones((d,), dt),
+                "tm_cm": rwkv6.init_rwkv(k, cfg, dt),
+            }
+
+        p["layers"] = _stack_init(one_rwkv, keys[2], cfg.num_layers)
+    else:
+        raise ValueError(cfg.family)
+
+    p["final_norm"] = jnp.ones((d,), dt)
+    if not cfg.tie_embeddings:
+        p["unembed"] = jax.random.normal(keys[4], (d, cfg.vocab_size), dt) * d**-0.5
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    """Returns (h (B,S,D), angles or None)."""
+    if cfg.family == "audio":
+        h = batch["frames"].astype(cfg.jnp_dtype) @ params["frame_proj"]
+        b, s, d = h.shape
+        # stub positional encoding (the real model uses a conv pos-embed)
+        half = d // 2
+        inv = 10000 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+        pos = jnp.arange(s, dtype=jnp.float32)[:, None] * inv
+        pe = jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], -1).astype(h.dtype)
+        return shard(h + pe, "batch", "seq_act", "embed"), None
+
+    tok = params["embed"][batch["tokens"]]  # gather; vocab-sharded table
+    if cfg.family == "vlm":
+        h = jnp.concatenate(
+            [batch["vision_embeds"].astype(tok.dtype), tok], axis=1
+        )
+        angles = L.mrope_angles(
+            batch["positions"], cfg.head_dim_, cfg.rope_theta, cfg.mrope_sections
+        )
+    else:
+        h = tok
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        angles = L.rope_angles(positions, cfg.head_dim_, cfg.rope_theta)
+        if cfg.family == "ssm":
+            angles = None
+    return shard(h, "batch", "seq_act", "embed"), angles
+
+
+def _unembed(params: Params, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = h @ w.astype(h.dtype)
+    return shard(logits, "batch", None, "vocab")
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params: Params,
+    batch: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    *,
+    mode: str = "train",  # train | prefill
+) -> Dict[str, Any]:
+    h, angles = _embed_inputs(params, batch, cfg)
+    prefill = mode == "prefill"
+    aux0 = jnp.zeros((), jnp.float32)
+    cache = None
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+
+        def block(carry, lp):
+            hh, aux = carry
+            a_in = L.rms_norm(hh, lp["ln1"], cfg.norm_eps)
+            attn_out, kv = L.attention_block(
+                lp["attn"], a_in, cfg, angles=angles, return_kv=prefill
+            )
+            hh = hh + attn_out
+            m_in = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                mo, al = moe.moe_block(lp["moe"], m_in, cfg)
+                if cfg.moe_dense_residual:
+                    mo = mo + L.mlp_block(lp["mlp"], m_in, cfg.mlp_type)
+                aux = aux + al
+            else:
+                mo = L.mlp_block(lp["mlp"], m_in, cfg.mlp_type)
+            hh = shard(hh + mo, "batch", "seq_act", "embed")
+            return (hh, aux), (kv if prefill else None)
+
+        (h, aux0), kvs = jax.lax.scan(_maybe_remat(block, cfg), (h, aux0), params["layers"])
+        if prefill and kvs is not None:
+            cache = {"k": kvs[0], "v": kvs[1]}  # (L, B, Hkv, S, Dh)
+
+    elif cfg.family == "hybrid":
+        nb = cfg.num_layers // cfg.hybrid_block
+        grouped = jax.tree.map(
+            lambda x: x.reshape((nb, cfg.hybrid_block) + x.shape[1:]), params["layers"]
+        )
+        shared = params["shared"]
+        shared_kvs, m_h, m_conv = [], [], []
+
+        def mblock(hh, lp):
+            out = mamba2.mamba_block(
+                lp["mamba"], L.rms_norm(hh, lp["ln"], cfg.norm_eps), cfg,
+                return_state=prefill,
+            )
+            if prefill:
+                y, mcache = out
+                return hh + y, (mcache.h, mcache.conv)
+            return hh + out, None
+
+        for i in range(nb):
+            blk = jax.tree.map(lambda x: x[i], grouped)
+            h, ys = jax.lax.scan(_maybe_remat(mblock, cfg), h, blk)
+            if prefill:
+                m_h.append(ys[0])
+                m_conv.append(ys[1])
+            a_in = L.rms_norm(h, shared["ln1"], cfg.norm_eps)
+            attn_out, kv = L.attention_block(
+                shared["attn"], a_in, cfg, angles=angles, return_kv=prefill
+            )
+            h = h + attn_out
+            h = h + L.mlp_block(
+                shared["mlp"], L.rms_norm(h, shared["ln2"], cfg.norm_eps), cfg.mlp_type
+            )
+            if prefill:
+                shared_kvs.append(kv)
+        if prefill:
+            cache = {
+                "k": jnp.stack([kv[0] for kv in shared_kvs]),
+                "v": jnp.stack([kv[1] for kv in shared_kvs]),
+                "mamba_h": jnp.concatenate(m_h, axis=0),
+                "mamba_conv": jnp.concatenate(m_conv, axis=0).astype(cfg.jnp_dtype),
+            }
+
+    elif cfg.family == "ssm":
+        b = h.shape[0]
+        zeros_x = jnp.zeros((b, cfg.d_model), h.dtype)
+        s0 = jnp.zeros((b, cfg.d_model // rwkv6.HEAD, rwkv6.HEAD, rwkv6.HEAD), jnp.float32)
+
+        def block(hh, lp):
+            y, s_n, x_tm = rwkv6.time_mix(
+                lp["tm_cm"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps), cfg, zeros_x, s0
+            )
+            hh = hh + y
+            cm_in = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
+            cm, x_cm = rwkv6.channel_mix(lp["tm_cm"], cm_in, zeros_x)
+            ys = (
+                (s_n, x_tm.astype(jnp.float32), x_cm.astype(jnp.float32))
+                if prefill else None
+            )
+            return hh + cm, ys
+
+        h, ys = jax.lax.scan(_maybe_remat(block, cfg), h, params["layers"])
+        if prefill:
+            cache = {"s": ys[0], "x_tm": ys[1], "x_cm": ys[2]}
+    else:
+        raise ValueError(cfg.family)
+
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    out = {"hidden": h, "aux_loss": aux0}
+    if mode != "hidden":
+        out["logits"] = _unembed(params, h, cfg)
+    if prefill:
+        out["cache"] = cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Loss / train objective
+# ---------------------------------------------------------------------------
+
+
+def _chunked_ce(h: jax.Array, labels: jax.Array, w: jax.Array, chunk: int):
+    """Cross entropy without materializing full-sequence f32 logits.
+
+    Scans over sequence chunks; the chunk logits are rematerialized in the
+    backward pass (jax.checkpoint), so live memory is one (B, chunk, V) slab
+    instead of (B, S, V). The unembed wgrad accumulates across chunks."""
+    b, s, d = h.shape
+    if s % chunk:
+        chunk = s  # fallback: single chunk
+    n = s // chunk
+    hc = h.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(acc, args):
+        hi, li = args
+        logits = shard((hi @ w).astype(jnp.float32), "batch", None, "vocab")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / (b * s)
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            *, loss_chunk: int = 512):
+    from repro.launch.sharding import axes_size
+
+    out = forward(params, batch, cfg, mode="hidden")
+    h = out["hidden"]
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # loss over text positions only
+        ntext = batch["tokens"].shape[1]
+        h = h[:, -ntext:, :]
+        labels = labels[:, -ntext:]
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    if axes_size("seq_act") > 1:
+        # SP profile: the seq dim is sharded over the model axis, so the full
+        # logits fit (1/16 of rows per device) — chunk-scanning would break
+        # the seq sharding and replicate the vocab matmul on every shard.
+        logits = shard((h @ w.astype(h.dtype)).astype(jnp.float32),
+                       "batch", "seq_act", None)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(lse - gold)
+    else:
+        ce = _chunked_ce(h, labels, w.astype(h.dtype), loss_chunk)
+    total = ce + 0.01 * out["aux_loss"]
+    return total, {"ce": ce, "aux": out["aux_loss"]}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Allocated decode cache (smoke tests); mirror of cache_specs."""
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_specs(cfg, batch, max_len)
+    )
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    dt = cfg.jnp_dtype
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim_
+    sds = jax.ShapeDtypeStruct
+    if cfg.family in ("dense", "moe", "vlm"):
+        l = cfg.num_layers
+        return {
+            "k": sds((l, batch, hkv, max_len, dh), dt),
+            "v": sds((l, batch, hkv, max_len, dh), dt),
+        }
+    if cfg.family == "hybrid":
+        nb = cfg.num_layers // cfg.hybrid_block
+        d_inner, nh, hd, n = mamba2.dims(cfg)
+        conv_dim = d_inner + 2 * n
+        return {
+            "k": sds((nb, batch, hkv, max_len, dh), dt),
+            "v": sds((nb, batch, hkv, max_len, dh), dt),
+            "mamba_h": sds((cfg.num_layers, batch, nh, hd, n), jnp.float32),
+            "mamba_conv": sds((cfg.num_layers, batch, cfg.d_conv - 1, conv_dim), dt),
+        }
+    if cfg.family == "ssm":
+        l, d = cfg.num_layers, cfg.d_model
+        return {
+            "s": sds((l, batch, d // rwkv6.HEAD, rwkv6.HEAD, rwkv6.HEAD), jnp.float32),
+            "x_tm": sds((l, batch, d), jnp.float32),
+            "x_cm": sds((l, batch, d), jnp.float32),
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_step(
+    params: Params,
+    cache: Dict[str, Any],
+    batch: Dict[str, jax.Array],
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One token for every sequence in the batch. tokens: (B, 1)."""
+    tokens, pos = batch["tokens"], batch["cache_pos"]
+    b = tokens.shape[0]
+    h = shard(params["embed"][tokens], "batch", None, "embed")
+    mesh = active_mesh()
+    seq_sharded = b == 1 and mesh is not None and cfg.family != "ssm"
+
+    if cfg.family == "vlm":
+        angles = L.mrope_angles(
+            batch["positions"], cfg.head_dim_, cfg.rope_theta, cfg.mrope_sections
+        )
+    elif cfg.family == "ssm":
+        angles = None
+    else:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1))
+        angles = L.rope_angles(positions, cfg.head_dim_, cfg.rope_theta)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+
+        def block(hh, xs):
+            lp, ck, cv = xs
+            a_in = L.rms_norm(hh, lp["ln1"], cfg.norm_eps)
+            attn_out, kv = L.attention_block(
+                lp["attn"], a_in, cfg, angles=angles, cache=(ck, cv), cache_pos=pos,
+                mesh=mesh, seq_sharded_cache=seq_sharded,
+            )
+            hh = hh + attn_out
+            m_in = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                mo, _ = moe.moe_block(lp["moe"], m_in, cfg)
+                if cfg.moe_dense_residual:
+                    mo = mo + L.mlp_block(lp["mlp"], m_in, cfg.mlp_type)
+            else:
+                mo = L.mlp_block(lp["mlp"], m_in, cfg.mlp_type)
+            return hh + mo, kv
+
+        h, kvs = jax.lax.scan(block, h, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": kvs[0], "v": kvs[1]}
+
+    elif cfg.family == "hybrid":
+        nb = cfg.num_layers // cfg.hybrid_block
+        grouped = jax.tree.map(
+            lambda x: x.reshape((nb, cfg.hybrid_block) + x.shape[1:]), params["layers"]
+        )
+        mh = cache["mamba_h"].reshape((nb, cfg.hybrid_block) + cache["mamba_h"].shape[1:])
+        mc = cache["mamba_conv"].reshape(
+            (nb, cfg.hybrid_block) + cache["mamba_conv"].shape[1:]
+        )
+        shared = params["shared"]
+        new_k, new_v, new_h, new_conv = [], [], [], []
+
+        def mblock(hh, xs):
+            lp, h_st, c_st = xs
+            y, mcache = mamba2.mamba_decode_step(
+                lp["mamba"],
+                L.rms_norm(hh, lp["ln"], cfg.norm_eps),
+                mamba2.MambaCache(h=h_st, conv=c_st),
+                cfg,
+            )
+            return hh + y, (mcache.h, mcache.conv)
+
+        for i in range(nb):
+            blk = jax.tree.map(lambda x: x[i], grouped)
+            h, (hs, cs) = jax.lax.scan(mblock, h, (blk, mh[i], mc[i]))
+            new_h.append(hs)
+            new_conv.append(cs)
+            a_in = L.rms_norm(h, shared["ln1"], cfg.norm_eps)
+            attn_out, kv = L.attention_block(
+                shared["attn"], a_in, cfg, angles=angles,
+                cache=(cache["k"][i], cache["v"][i]), cache_pos=pos,
+                mesh=mesh, seq_sharded_cache=seq_sharded,
+            )
+            h = h + attn_out
+            h = h + L.mlp_block(
+                shared["mlp"], L.rms_norm(h, shared["ln2"], cfg.norm_eps), cfg.mlp_type
+            )
+            new_k.append(kv[0])
+            new_v.append(kv[1])
+        new_cache = {
+            "k": jnp.stack(new_k),
+            "v": jnp.stack(new_v),
+            "mamba_h": jnp.concatenate(new_h).reshape(cache["mamba_h"].shape),
+            "mamba_conv": jnp.concatenate(new_conv).reshape(cache["mamba_conv"].shape),
+        }
+
+    elif cfg.family == "ssm":
+        h2 = h[:, 0, :]
+
+        def block(hh, xs):
+            lp, s_st, xtm, xcm = xs
+            y, s_n, x_tm = rwkv6.time_mix_decode(
+                lp["tm_cm"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps), cfg, xtm, s_st
+            )
+            hh = hh + y
+            cm, x_cm = rwkv6.channel_mix_decode(
+                lp["tm_cm"], L.rms_norm(hh, lp["ln2"], cfg.norm_eps), xcm
+            )
+            return hh + cm, (s_n, x_tm.astype(jnp.float32), x_cm.astype(jnp.float32))
+
+        h2, (s_n, xtm_n, xcm_n) = jax.lax.scan(
+            block, h2, (params["layers"], cache["s"], cache["x_tm"], cache["x_cm"])
+        )
+        h = h2[:, None, :]
+        new_cache = {"s": s_n, "x_tm": xtm_n, "x_cm": xcm_n}
+    else:
+        raise ValueError(cfg.family)
+
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, h, cfg)
+    return logits, new_cache

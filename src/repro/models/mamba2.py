@@ -1,0 +1,184 @@
+"""Mamba-2 (SSD) block — used by zamba2-2.7b.
+
+Chunked state-space-duality algorithm: within a chunk the recurrence is
+evaluated as masked (decay-weighted) attention-like matmuls; across chunks a
+small state (heads, head_dim, N) is carried by lax.scan. Per-head scalar decay
+(the SSD restriction) with n_groups=1 shared B/C, per-head dt, conv width 4.
+
+Decode is the exact recurrence: h <- exp(dt*A) h + dt * x (x) B, y = h C + Dx.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import shard
+
+Params = Dict[str, jax.Array]
+
+
+class MambaCache(NamedTuple):
+    h: jax.Array  # (B, nh, hd, N) SSM state
+    conv: jax.Array  # (B, d_conv-1, d_conv_dim) rolling conv inputs
+
+
+def dims(cfg) -> Tuple[int, int, int, int]:
+    d_inner = 2 * cfg.d_model
+    nh = d_inner // cfg.ssm_head_dim
+    return d_inner, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    d_inner, nh, hd, n = dims(cfg)
+    conv_dim = d_inner + 2 * n
+    ks = jax.random.split(key, 5)
+    std = d**-0.5
+    return {
+        # in_proj -> [z (d_inner), xBC (d_inner + 2N), dt (nh)]
+        "w_in": jax.random.normal(ks[0], (d, 2 * d_inner + 2 * n + nh), dtype) * std,
+        "conv_w": jax.random.normal(ks[1], (cfg.d_conv, conv_dim), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dtype),
+        "w_out": jax.random.normal(ks[2], (d_inner, d), dtype) * (d_inner**-0.5),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. x: (B, S, C), w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _split(cfg, proj):
+    d_inner, nh, hd, n = dims(cfg)
+    z, xbc, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def mamba_block(
+    p: Params, x: jax.Array, cfg, *, return_state: bool = False
+):
+    """Full-sequence (train/prefill) chunked SSD. x: (B, S, D) -> (B, S, D)
+    (+ final MambaCache when ``return_state`` — SSM prefill emits O(1) state
+    instead of a KV cache)."""
+    b, s, d = x.shape
+    d_inner, nh, hd, n = dims(cfg)
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0
+    nchunks = s // q
+
+    proj = x @ p["w_in"]
+    z, xbc, dt = _split(cfg, proj)
+    xbc_preconv = xbc
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xs = xs.reshape(b, s, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    a = -jnp.exp(p["a_log"])  # (nh,) negative
+    loga = dt * a  # (B,S,nh) log decay, <= 0
+
+    # chunk views
+    xs_c = xs.reshape(b, nchunks, q, nh, hd)
+    b_c = bmat.reshape(b, nchunks, q, n)
+    c_c = cmat.reshape(b, nchunks, q, n)
+    dt_c = dt.reshape(b, nchunks, q, nh)
+    la_c = loga.reshape(b, nchunks, q, nh)
+
+    def chunk_step(h, args):
+        xq, bq, cq, dtq, laq = args  # (B,q,...) for one chunk
+        cum = jnp.cumsum(laq, axis=1)  # (B,q,nh) inclusive
+        # intra-chunk: y[i] += sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) dt_j x_j
+        g = jnp.einsum("bin,bjn->bij", cq.astype(jnp.float32), bq.astype(jnp.float32))
+        decay = cum[:, :, None, :] - cum[:, None, :, :]  # (B,i,j,nh)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        # mask BEFORE exp: upper-triangle args are positive and would overflow
+        # to inf, poisoning the backward pass with inf*0 = nan.
+        decay = jnp.where(mask[None, :, :, None], decay, -1e9)
+        m = jnp.exp(decay)
+        w_ij = g[..., None] * m  # (B,i,j,nh)
+        dx = dtq[..., None] * xq.astype(jnp.float32)  # (B,q,nh,hd)
+        y = jnp.einsum("bijh,bjhp->bihp", w_ij, dx)
+        # inter-chunk: y[i] += exp(cum_i) * C_i . h_in
+        y = y + jnp.einsum("bin,bhpn->bihp", cq.astype(jnp.float32), h) * jnp.exp(
+            cum
+        ).transpose(0, 1, 2)[..., None]
+        # state update: h_out = exp(cum_last) h_in + sum_j exp(cum_last-cum_j) dx_j (x) B_j
+        tail = jnp.exp(cum[:, -1:, :] - cum)  # (B,q,nh)
+        h = h * jnp.exp(cum[:, -1, :])[:, :, None, None] + jnp.einsum(
+            "bjhp,bjn,bjh->bhpn", dx, bq.astype(jnp.float32), tail
+        )
+        return h, y
+
+    h0 = jnp.zeros((b, nh, hd, n), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        chunk_step,
+        h0,
+        (
+            xs_c.transpose(1, 0, 2, 3, 4),
+            b_c.transpose(1, 0, 2, 3),
+            c_c.transpose(1, 0, 2, 3),
+            dt_c.transpose(1, 0, 2, 3),
+            la_c.transpose(1, 0, 2, 3),
+        ),
+    )
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, hd)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+
+    from .layers import rms_norm
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = shard(y @ p["w_out"], "batch", "seq_act", "embed")
+    if return_state:
+        cache = MambaCache(h=h_final, conv=xbc_preconv[:, s - cfg.d_conv + 1 :, :])
+        return out, cache
+    return out
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32) -> MambaCache:
+    d_inner, nh, hd, n = dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return MambaCache(
+        h=jnp.zeros((batch, nh, hd, n), jnp.float32),
+        conv=jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+    )
+
+
+def mamba_decode_step(
+    p: Params, x: jax.Array, cache: MambaCache, cfg
+) -> Tuple[jax.Array, MambaCache]:
+    """One-token recurrence. x: (B, 1, D)."""
+    b, _, d = x.shape
+    d_inner, nh, hd, n = dims(cfg)
+
+    proj = x[:, 0] @ p["w_in"]
+    z, xbc, dt = _split(cfg, proj)
+    conv_in = jnp.concatenate([cache.conv, xbc[:, None, :]], axis=1)  # (B,K,C)
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_in, p["conv_w"]) + p["conv_b"])
+    new_conv = conv_in[:, 1:, :]
+
+    xs, bvec, cvec = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xs = xs.reshape(b, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    da = jnp.exp(dt * (-jnp.exp(p["a_log"])))  # (B,nh)
+
+    dx = dt[..., None] * xs.astype(jnp.float32)  # (B,nh,hd)
+    h = cache.h * da[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", dx, bvec.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h, cvec.astype(jnp.float32))
+    y = y + p["d_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, d_inner).astype(x.dtype)
+
+    from .layers import rms_norm
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return (y @ p["w_out"])[:, None, :], MambaCache(h=h, conv=new_conv)

@@ -1,0 +1,199 @@
+"""RWKV-6 (Finch) block — data-dependent per-channel decay linear attention.
+
+Time-mix recurrence per head (dk = dv = head size):
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+    y_t = r_t @ (S_{t-1} + diag(u) k_t (x) v_t)
+with decay w_t = exp(-exp(wproj_t)) in (0,1), data-dependent via a token-shift
+LoRA. Training/prefill run a chunked form (intra-chunk masked matmuls +
+inter-chunk state scan); decode is the exact recurrence.
+
+Channel mix: relu^2 gated FFN with token shift (Finch §2).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import shard
+
+Params = Dict[str, jax.Array]
+
+HEAD = 64  # rwkv6 head size (dk = dv)
+
+
+class RWKVCache(NamedTuple):
+    s: jax.Array  # (B, H, dk, dv) wkv state
+    x_tm: jax.Array  # (B, D) last token input of the time-mix ln
+    x_cm: jax.Array  # (B, D) last token input of the channel-mix ln
+
+
+def init_rwkv(key, cfg, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    h = d // HEAD
+    ks = jax.random.split(key, 10)
+    std = d**-0.5
+    lora = 64
+    return {
+        # time mix
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "wr": jax.random.normal(ks[0], (d, d), dtype) * std,
+        "wk": jax.random.normal(ks[1], (d, d), dtype) * std,
+        "wv": jax.random.normal(ks[2], (d, d), dtype) * std,
+        "wg": jax.random.normal(ks[3], (d, d), dtype) * std,
+        "wo": jax.random.normal(ks[4], (d, d), dtype) * std,
+        # data-dependent decay LoRA: w = base + tanh(x @ a) @ b
+        "w_base": jnp.full((d,), -1.0, jnp.float32),
+        "w_lora_a": jax.random.normal(ks[5], (d, lora), dtype) * std,
+        "w_lora_b": jax.random.normal(ks[6], (lora, d), dtype) * (lora**-0.5),
+        "u_bonus": jnp.zeros((h, HEAD), jnp.float32),
+        "ln_x": jnp.ones((d,), dtype),
+        # channel mix
+        "cmu_k": jnp.full((d,), 0.5, dtype),
+        "cmu_r": jnp.full((d,), 0.5, dtype),
+        "ck": jax.random.normal(ks[7], (d, f), dtype) * std,
+        "cv": jax.random.normal(ks[8], (f, d), dtype) * (f**-0.5),
+        "cr": jax.random.normal(ks[9], (d, d), dtype) * std,
+    }
+
+
+def _token_shift(x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """x: (B,S,D) -> previous token's x (first position uses x_prev)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def time_mix(
+    p: Params, x: jax.Array, cfg, x_prev: jax.Array, s0: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked WKV6. x: (B,S,D). Returns (y, new_state, last_x)."""
+    b, s, d = x.shape
+    h = d // HEAD
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0
+    nchunks = s // q
+
+    xs = _token_shift(x, x_prev)
+    r = _mix(x, xs, p["mu_r"]) @ p["wr"]
+    k = _mix(x, xs, p["mu_k"]) @ p["wk"]
+    v = _mix(x, xs, p["mu_v"]) @ p["wv"]
+    g = jax.nn.silu(_mix(x, xs, p["mu_g"]) @ p["wg"])
+    wx = _mix(x, xs, p["mu_w"])
+    wproj = p["w_base"] + jnp.tanh(wx @ p["w_lora_a"]).astype(jnp.float32) @ p[
+        "w_lora_b"
+    ].astype(jnp.float32)
+    logw = -jnp.exp(wproj)  # (B,S,D) log decay <= 0
+
+    def heads(t):
+        return t.reshape(b, s, h, HEAD)
+
+    r_, k_, v_, lw = heads(r), heads(k), heads(v), logw.reshape(b, s, h, HEAD)
+    rc = r_.reshape(b, nchunks, q, h, HEAD).transpose(1, 0, 3, 2, 4)  # (C,B,H,q,dk)
+    kc = k_.reshape(b, nchunks, q, h, HEAD).transpose(1, 0, 3, 2, 4)
+    vc = v_.reshape(b, nchunks, q, h, HEAD).transpose(1, 0, 3, 2, 4)
+    lc = lw.reshape(b, nchunks, q, h, HEAD).transpose(1, 0, 3, 2, 4)
+    u = p["u_bonus"]  # (H, dk)
+
+    def chunk_step(state, args):
+        rq, kq, vq, lq = (t.astype(jnp.float32) for t in args)  # (B,H,q,·)
+        cw = jnp.cumsum(lq, axis=2)  # inclusive (B,H,q,dk)
+        pw = cw - lq  # exclusive prefix (B,H,q,dk)
+        # inter-chunk: y_t += (r_t * exp(pw_t)) @ S_in
+        y = jnp.einsum("bhqk,bhkv->bhqv", rq * jnp.exp(pw), state)
+        # intra-chunk, strictly-lower: A[t,s] = (r_t*exp(pw_t - cw_s)) . k_s.
+        # The true pair exponent pw_t - cw_s <= 0; the FACTORED terms exp(pw)
+        # and exp(-cw) can individually overflow for long chunks / fast decay,
+        # so both exponents are clamped (heavily-decayed pairs round to 0).
+        amat = jnp.einsum(
+            "bhtk,bhsk->bhts",
+            rq * jnp.exp(jnp.clip(pw, -80.0, 0.0)),
+            kq * jnp.exp(jnp.clip(-cw, -80.0, 80.0)),
+        )
+        mask = jnp.tril(jnp.ones((q, q), bool), k=-1)
+        amat = jnp.where(mask[None, None], amat, 0.0)
+        y = y + jnp.einsum("bhts,bhsv->bhtv", amat, vq)
+        # diagonal bonus: y_t += (r_t * u * k_t) . v_t
+        diag = jnp.sum(rq * u[None, :, None, :] * kq, axis=-1, keepdims=True)
+        y = y + diag * vq
+        # state: S_out = exp(cw_last) * S_in + sum_s (k_s exp(cw_last-cw_s)) (x) v_s
+        tail = jnp.exp(cw[:, :, -1:, :] - cw)
+        state = state * jnp.exp(cw[:, :, -1, :])[..., None] + jnp.einsum(
+            "bhsk,bhsv->bhkv", kq * tail, vq
+        )
+        return state, y
+
+    sN, ys = jax.lax.scan(chunk_step, s0.astype(jnp.float32), (rc, kc, vc, lc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, d).astype(x.dtype)
+
+    from .layers import rms_norm
+
+    y = rms_norm(y, p["ln_x"], cfg.norm_eps) * g
+    y = shard(y @ p["wo"], "batch", "seq_act", "embed")
+    return y, sN, x[:, -1, :]
+
+
+def time_mix_decode(
+    p: Params, x: jax.Array, cfg, x_prev: jax.Array, s0: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Exact single-token recurrence. x: (B, D)."""
+    b, d = x.shape
+    h = d // HEAD
+    x_prev = x_prev.astype(x.dtype)  # cache stores f32; keep carry dtype stable
+    r = _mix(x, x_prev, p["mu_r"]) @ p["wr"]
+    k = _mix(x, x_prev, p["mu_k"]) @ p["wk"]
+    v = _mix(x, x_prev, p["mu_v"]) @ p["wv"]
+    g = jax.nn.silu(_mix(x, x_prev, p["mu_g"]) @ p["wg"])
+    wx = _mix(x, x_prev, p["mu_w"])
+    wproj = p["w_base"] + jnp.tanh(wx @ p["w_lora_a"]).astype(jnp.float32) @ p[
+        "w_lora_b"
+    ].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wproj)).reshape(b, h, HEAD)  # decay in (0,1)
+
+    r_, k_, v_ = (t.reshape(b, h, HEAD).astype(jnp.float32) for t in (r, k, v))
+    kv = jnp.einsum("bhk,bhv->bhkv", k_, v_)
+    y = jnp.einsum("bhk,bhkv->bhv", r_, s0 + p["u_bonus"][None, :, :, None] * kv)
+    s_new = s0 * w[..., None] + kv
+    y = y.reshape(b, d).astype(x.dtype)
+
+    from .layers import rms_norm
+
+    y = rms_norm(y, p["ln_x"], cfg.norm_eps) * g
+    return y @ p["wo"], s_new, x
+
+
+def channel_mix(
+    p: Params, x: jax.Array, x_prev: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Finch channel mix (relu^2). x: (B,S,D); returns (out, last_x)."""
+    xs = _token_shift(x, x_prev)
+    xk = _mix(x, xs, p["cmu_k"])
+    xr = _mix(x, xs, p["cmu_r"])
+    hdn = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    hdn = shard(hdn, "batch", "seq_act", "mlp")
+    out = jax.nn.sigmoid(xr @ p["cr"]) * shard(hdn @ p["cv"], "batch", "seq_act", "embed")
+    return out, x[:, -1, :]
+
+
+def channel_mix_decode(p: Params, x: jax.Array, x_prev: jax.Array):
+    x_prev = x_prev.astype(x.dtype)
+    xk = _mix(x, x_prev, p["cmu_k"])
+    xr = _mix(x, x_prev, p["cmu_r"])
+    hdn = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    return jax.nn.sigmoid(xr @ p["cr"]) * (hdn @ p["cv"]), x
+
+
+def init_rwkv_cache(cfg, batch: int) -> RWKVCache:
+    d = cfg.d_model
+    return RWKVCache(
+        s=jnp.zeros((batch, d // HEAD, HEAD, HEAD), jnp.float32),
+        x_tm=jnp.zeros((batch, d), jnp.float32),
+        x_cm=jnp.zeros((batch, d), jnp.float32),
+    )

@@ -1,0 +1,5 @@
+from . import adamw, compression, hybrid, schedule
+from .adamw import AdamWState
+from .compression import PowerSGDState
+
+__all__ = ["adamw", "compression", "hybrid", "schedule", "AdamWState", "PowerSGDState"]

@@ -1,0 +1,56 @@
+"""AdamW from scratch (no optax dependency), FSDP-friendly.
+
+State mirrors the param pytree (m, v in f32) so any param sharding applies
+verbatim to the optimizer state — ZeRO-style when params are FSDP-sharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # () int32
+    m: PyTree  # f32, like params
+    v: PyTree  # f32, like params
+
+
+def init(params: PyTree) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+
+def update(
+    grads: PyTree,
+    state: AdamWState,
+    params: PyTree,
+    *,
+    lr: jax.Array | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[PyTree, AdamWState]:
+    """Returns (new_params, new_state)."""
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * g32
+        v = b2 * v + (1.0 - b2) * (g32 * g32)
+        mh = m / c1
+        vh = v / c2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v)

@@ -1,0 +1,107 @@
+"""PowerSGD-style low-rank gradient compression with error feedback.
+
+Beyond-paper feature that REUSES the paper's insight: DFW-TRACE communicates
+rank-1 factors (O(d+m)) instead of d x m gradients; PowerSGD generalizes the
+same trick to rank-r compression of *backbone* data-parallel gradient syncs.
+One power-method iteration per step (warm-started Q), orthonormalized P.
+
+With an ``axis_name`` the psums are the only cross-device traffic for the
+compressed tensors: r(d+m) floats instead of d*m. Without it the math still
+runs (tests / reference).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class PowerSGDState(NamedTuple):
+    q: PyTree  # per-compressed-leaf (m, r) warm-start factors
+    error: PyTree  # per-compressed-leaf (d, m) error feedback
+
+
+def _compressible(leaf: jax.Array, min_size: int) -> bool:
+    return leaf.ndim >= 2 and leaf.size >= min_size
+
+
+def _as2d(x: jax.Array) -> jax.Array:
+    return x.reshape(x.shape[0], -1) if x.ndim != 2 else x
+
+
+def init(params: PyTree, *, rank: int = 4, min_size: int = 4096, key=None) -> PowerSGDState:
+    key = jax.random.PRNGKey(0) if key is None else key
+    flat, treedef = jax.tree.flatten(params)
+    qs, errs = [], []
+    for i, p in enumerate(flat):
+        if _compressible(p, min_size):
+            m = _as2d(p).shape[1]
+            qs.append(jax.random.normal(jax.random.fold_in(key, i), (m, rank), jnp.float32))
+            errs.append(jnp.zeros(_as2d(p).shape, jnp.float32))
+        else:
+            qs.append(None)
+            errs.append(None)
+    return PowerSGDState(
+        q=jax.tree.unflatten(treedef, qs), error=jax.tree.unflatten(treedef, errs)
+    )
+
+
+def _orthonormalize(p: jax.Array) -> jax.Array:
+    q, _ = jnp.linalg.qr(p)
+    return q
+
+
+def compress_and_sync(
+    grads: PyTree,
+    state: PowerSGDState,
+    *,
+    min_size: int = 4096,
+    axis_name: Optional[str] = None,
+) -> Tuple[PyTree, PowerSGDState]:
+    """Replace each large-2D grad with its rank-r sync'd approximation.
+
+    Small leaves are psum-averaged exactly. Returns (synced_grads, new_state).
+    """
+
+    def psum_mean(x):
+        if axis_name is None:
+            return x
+        return jax.lax.pmean(x, axis_name)
+
+    def one(g, q, e):
+        if q is None:
+            return psum_mean(g), None, None
+        g2 = _as2d(g).astype(jnp.float32) + e  # error feedback
+        p = psum_mean(g2 @ q)  # (d, r): the only wire traffic ...
+        p = _orthonormalize(p)
+        q_new = psum_mean(g2.T @ p)  # (m, r): ... plus this
+        approx = p @ q_new.T
+        e_new = g2 - approx
+        return approx.reshape(g.shape).astype(g.dtype), q_new, e_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_q = treedef.flatten_up_to(state.q)
+    flat_e = treedef.flatten_up_to(state.error)
+    outs = [one(g, q, e) for g, q, e in zip(flat_g, flat_q, flat_e)]
+    synced = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_q = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_e = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    return synced, PowerSGDState(q=new_q, error=new_e)
+
+
+def wire_bytes(params: PyTree, *, rank: int = 4, min_size: int = 4096) -> Dict[str, int]:
+    """Bytes-on-wire per DP sync: compressed vs dense (paper Table-1 analogue)."""
+    dense = 0
+    compressed = 0
+    for p in jax.tree.leaves(params):
+        nbytes = p.size * 4
+        if _compressible(p, min_size):
+            d, m = _as2d(p).shape
+            compressed += 4 * rank * (d + m)
+        else:
+            compressed += nbytes
+        dense += nbytes
+    return {"dense": dense, "compressed": compressed}

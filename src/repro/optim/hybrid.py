@@ -1,0 +1,83 @@
+"""Hybrid optimizer: AdamW backbone + DFW-TRACE trace-norm-constrained head.
+
+The paper's technique as a first-class training-loop feature: the unembedding
+head W (d_model x vocab) is optimized with Frank-Wolfe steps inside the
+trace-norm ball ||W||_* <= mu (rank-1 update per step, LMO via the power
+method on the head gradient), while every other parameter takes AdamW.
+
+Distribution: the head gradient is already data-parallel-summed by the
+surrounding pjit (GSPMD inserts the reduction); on top of that the FW update
+itself only *applies* a rank-1 matrix — per-step head traffic beyond the
+gradient psum is O(d + V), the paper's headline property. With the head
+gradient sharded (vocab over 'model'), the power-method matvecs run sharded
+and psum O(d)/O(V/16) vectors.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.power_method import power_iterations, sphere_vector
+
+from . import adamw, schedule
+
+PyTree = Any
+
+
+class HybridState(NamedTuple):
+    adam: adamw.AdamWState  # over backbone params (head slots zero-masked)
+    fw_step: jax.Array  # () int32 — FW epoch counter t
+
+
+def init(params: PyTree) -> HybridState:
+    return HybridState(adam=adamw.init(params), fw_step=jnp.zeros((), jnp.int32))
+
+
+def make_hybrid_train_step(
+    cfg,
+    *,
+    mu: float = 100.0,
+    power_iters: int = 2,
+    peak_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    head_key: str = "unembed",
+):
+    """Returns train_step(params, state, batch, key) for untied-head configs."""
+    from repro.models import lm
+
+    if cfg.tie_embeddings:
+        raise ValueError("hybrid DFW head requires an untied unembedding")
+
+    def train_step(params: Dict, state: HybridState, batch, key):
+        (loss, metrics), grads = jax.value_and_grad(lm.loss_fn, has_aux=True)(
+            params, batch, cfg
+        )
+        g_head = grads[head_key].astype(jnp.float32)  # (d, V)
+
+        # --- DFW-TRACE step on the head -----------------------------------
+        t = state.fw_step.astype(jnp.float32)
+        v0 = sphere_vector(jax.random.fold_in(key, state.fw_step), g_head.shape[1])
+        res = power_iterations(
+            lambda v: g_head @ v, lambda u: g_head.T @ u, v0, power_iters
+        )
+        gamma = 2.0 / (t + 2.0)
+        head_new = (
+            (1.0 - gamma) * params[head_key].astype(jnp.float32)
+            - (gamma * mu) * jnp.outer(res.u, res.v)
+        ).astype(params[head_key].dtype)
+
+        # --- AdamW on everything else --------------------------------------
+        grads = dict(grads, **{head_key: jnp.zeros_like(grads[head_key])})
+        lr = schedule.cosine_with_warmup(
+            state.adam.step, peak_lr=peak_lr, warmup=warmup, total=total_steps
+        )
+        new_params, new_adam = adamw.update(grads, state.adam, params, lr=lr)
+        new_params = dict(new_params, **{head_key: head_new})
+
+        metrics = dict(metrics, loss=loss, fw_gamma=gamma, fw_sigma=res.sigma)
+        return new_params, HybridState(adam=new_adam, fw_step=state.fw_step + 1), metrics
+
+    return train_step

@@ -1,0 +1,16 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / max(warmup, 1)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def constant(step, *, peak_lr: float):
+    return jnp.full_like(step, peak_lr, dtype=jnp.float32)

@@ -1,0 +1,155 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, power_matvec, rank1_update
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dt):
+    return dict(rtol=3e-2, atol=3e-2) if dt == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,m", [(256, 256), (300, 200), (65, 33), (128, 512), (1, 7)])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_matvec_rmatvec(n, m, dt):
+    a = (jax.random.normal(KEY, (n, m)) / np.sqrt(m)).astype(dt)
+    v = jax.random.normal(jax.random.fold_in(KEY, 1), (m,)).astype(dt)
+    u = jax.random.normal(jax.random.fold_in(KEY, 2), (n,)).astype(dt)
+    got = power_matvec.matvec(a, v, block_r=64, block_c=64, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(power_matvec.ref.matvec(a, v)[:, 0], np.float32), **_tol(dt))
+    got = power_matvec.rmatvec(a, u, block_r=64, block_c=64, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(power_matvec.ref.rmatvec(a, u)[:, 0], np.float32), **_tol(dt))
+
+
+def test_power_iter_step_matches_ref():
+    n, d, m = 300, 40, 28
+    x = jax.random.normal(KEY, (n, d)) / np.sqrt(d)
+    r = jax.random.normal(jax.random.fold_in(KEY, 3), (n, m))
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (m,))
+    v = v / jnp.linalg.norm(v)
+    u1, v1 = power_matvec.power_iter_step(x, r, v, interpret=True)
+    u2, v2 = power_matvec.ref.power_iter_step(x, r, v.reshape(-1, 1))
+    np.testing.assert_allclose(u1, u2[:, 0], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(v1, v2[:, 0], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,m", [(128, 128), (100, 90), (33, 257)])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_rank1_update(n, m, dt):
+    z = jax.random.normal(KEY, (n, m)).astype(dt)
+    y0 = jax.random.normal(jax.random.fold_in(KEY, 5), (n, m)).astype(dt)
+    xv = jax.random.normal(jax.random.fold_in(KEY, 6), (n,)).astype(dt)
+    yv = jax.random.normal(jax.random.fold_in(KEY, 7), (m,)).astype(dt)
+    got = rank1_update.rank1_update(z, xv, yv, 0.7, -0.3,
+                                    block_r=64, block_c=64, interpret=True)
+    want = rank1_update.ref.rank1_update(z, xv, yv, 0.7, -0.3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dt))
+    got = rank1_update.rank1_update_axpy(z, y0, xv, yv, 0.7, -0.3, -0.5,
+                                         block_r=64, block_c=64, interpret=True)
+    want = rank1_update.ref.rank1_update_axpy(z, y0, xv, yv, 0.7, -0.3, -0.5)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dt))
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+def test_flash_attention_gqa(causal, hq, hkv):
+    b, sq, skv, dh = 2, 96, 96, 32
+    q = jax.random.normal(KEY, (b, hq, sq, dh), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 8), (b, hkv, skv, dh))
+    v = jax.random.normal(jax.random.fold_in(KEY, 9), (b, hkv, skv, dh))
+    got = flash_attention.flash_attention(
+        q, k, v, scale=dh**-0.5, causal=causal, block_q=32, block_k=32, interpret=True)
+    want = flash_attention.ref.attention(q, k, v, scale=dh**-0.5, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_ragged_padding():
+    """Non-multiple seq lens exercise the kv_len mask path."""
+    b, hq, hkv, sq, skv, dh = 1, 2, 2, 50, 70, 16
+    q = jax.random.normal(KEY, (b, hq, sq, dh))
+    k = jax.random.normal(jax.random.fold_in(KEY, 10), (b, hkv, skv, dh))
+    v = jax.random.normal(jax.random.fold_in(KEY, 11), (b, hkv, skv, dh))
+    got = flash_attention.flash_attention(
+        q, k, v, scale=dh**-0.5, causal=False, block_q=32, block_k=32, interpret=True)
+    want = flash_attention.ref.attention(q, k, v, scale=dh**-0.5, causal=False)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    b, hq, hkv, s, dh = 2, 4, 2, 64, 32
+    q = jax.random.normal(KEY, (b, hq, s, dh)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(KEY, 12), (b, hkv, s, dh)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(KEY, 13), (b, hkv, s, dh)).astype(jnp.bfloat16)
+    got = flash_attention.flash_attention(
+        q, k, v, scale=dh**-0.5, causal=True, block_q=32, block_k=32, interpret=True)
+    want = flash_attention.ref.attention(q, k, v, scale=dh**-0.5, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("q,dk,dv", [(32, 16, 16), (64, 64, 64), (16, 32, 64)])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_wkv6_chunk_kernel(q, dk, dv, dt):
+    """WKV6 chunk kernel vs the exact sequential recurrence."""
+    from repro.kernels import wkv6_chunk
+
+    bh = 3
+    ks = jax.random.split(KEY, 6)
+    r = (jax.random.normal(ks[0], (bh, q, dk)) * 0.5).astype(dt)
+    k = (jax.random.normal(ks[1], (bh, q, dk)) * 0.5).astype(dt)
+    v = jax.random.normal(ks[2], (bh, q, dv)).astype(dt)
+    logw = (-jnp.exp(jax.random.normal(ks[3], (bh, q, dk)) * 0.3 - 1.0)).astype(dt)
+    u = (jax.random.normal(ks[4], (bh, dk)) * 0.2).astype(dt)
+    s0 = (jax.random.normal(ks[5], (bh, dk, dv)) * 0.3).astype(jnp.float32)
+
+    y_ref, s_ref = wkv6_chunk.ref.wkv6_chunk_batched(r, k, v, logw, u, s0)
+    y_k, s_k = wkv6_chunk.kernel.wkv6_chunk(r, k, v, logw, u, s0, interpret=True)
+    tol = dict(rtol=5e-2, atol=5e-2) if dt == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref), **tol)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref), **tol)
+
+
+def test_wkv6_chunk_matches_model_time_mix_step():
+    """The kernel computes the same chunk transition the rwkv6 model uses."""
+    from repro.configs import get_config
+    from repro.kernels import wkv6_chunk
+    from repro.models import rwkv6
+
+    cfg = get_config("rwkv6_7b", smoke=True)
+    b, s, d = 1, 32, cfg.d_model
+    h = d // rwkv6.HEAD
+    p = rwkv6.init_rwkv(jax.random.PRNGKey(3), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (b, s, d)) * 0.5
+    x_prev = jnp.zeros((b, d))
+    s0 = jnp.zeros((b, h, rwkv6.HEAD, rwkv6.HEAD))
+    y_model, s_model, _ = rwkv6.time_mix(p, x, cfg, x_prev, s0)
+
+    # recompute the same projections and feed the kernel chunk-by-chunk
+    xs = rwkv6._token_shift(x, x_prev)
+    r = (rwkv6._mix(x, xs, p["mu_r"]) @ p["wr"]).reshape(b, s, h, rwkv6.HEAD)
+    k = (rwkv6._mix(x, xs, p["mu_k"]) @ p["wk"]).reshape(b, s, h, rwkv6.HEAD)
+    v = (rwkv6._mix(x, xs, p["mu_v"]) @ p["wv"]).reshape(b, s, h, rwkv6.HEAD)
+    wx = rwkv6._mix(x, xs, p["mu_w"])
+    logw = (
+        -jnp.exp(p["w_base"] + jnp.tanh(wx @ p["w_lora_a"]) @ p["w_lora_b"])
+    ).reshape(b, s, h, rwkv6.HEAD)
+    q = cfg.ssm_chunk
+    state = jnp.zeros((b * h, rwkv6.HEAD, rwkv6.HEAD))
+    u = jnp.broadcast_to(p["u_bonus"], (b, h, rwkv6.HEAD)).reshape(b * h, rwkv6.HEAD)
+    for c0 in range(0, s, q):
+        args = [t[:, c0 : c0 + q].transpose(0, 2, 1, 3).reshape(b * h, q, rwkv6.HEAD)
+                for t in (r, k, v, logw)]
+        _, state = wkv6_chunk.kernel.wkv6_chunk(*args, u, state, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(state.reshape(b, h, rwkv6.HEAD, rwkv6.HEAD)),
+        np.asarray(s_model), rtol=1e-3, atol=1e-3)

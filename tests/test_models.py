@@ -1,0 +1,147 @@
+"""Per-arch smoke tests: reduced configs, forward/train-step on CPU,
+shape + finiteness assertions; decode==forward consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import lm
+from repro.optim import adamw
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=64):
+    if cfg.family == "audio":
+        return {
+            "frames": jax.random.normal(KEY, (b, s, cfg.frontend_dim)),
+            "labels": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size),
+        }
+    if cfg.family == "vlm":
+        sv = cfg.vision_tokens
+        return {
+            "tokens": jax.random.randint(KEY, (b, s - sv), 0, cfg.vocab_size),
+            "vision_embeds": jax.random.normal(KEY, (b, sv, cfg.d_model)),
+            "positions": jnp.broadcast_to(jnp.arange(s)[None, None, :], (b, 3, s)).astype(jnp.int32),
+            "labels": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size),
+    }
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = lm.init_params(cfg, KEY)
+    b, s = 2, 64
+    batch = _batch(cfg, b, s)
+    out = jax.jit(lambda p, bt: lm.forward(p, bt, cfg, mode="train"))(params, batch)
+    assert out["logits"].shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(out["logits"])))
+
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(lambda p, bt: lm.loss_fn(p, bt, cfg), has_aux=True)
+    )(params, batch)
+    assert bool(jnp.isfinite(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+
+    opt = adamw.init(params)
+    params2, opt2 = adamw.update(grads, opt, params, lr=1e-3)
+    assert int(opt2.step) == 1
+    changed = any(
+        not np.array_equal(np.asarray(a, np.float32), np.asarray(b_, np.float32))
+        for a, b_ in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ["codeqwen1_5_7b", "zamba2_2_7b", "rwkv6_7b"])
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    params = lm.init_params(cfg, jax.random.PRNGKey(42))
+    b, s = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+    full = np.asarray(
+        lm.forward(params, {"tokens": toks}, cfg, mode="train")["logits"], np.float32
+    )
+    cache = lm.init_cache(cfg, b, s)
+    step = jax.jit(lambda p, c, bt: lm.decode_step(p, c, bt, cfg))
+    errs = []
+    for t in range(s):
+        logits, cache = step(
+            params, cache, {"tokens": toks[:, t : t + 1], "cache_pos": jnp.int32(t)}
+        )
+        errs.append(np.max(np.abs(np.asarray(logits[:, 0], np.float32) - full[:, t])))
+    assert max(errs) < 2e-2, max(errs)
+
+
+def test_moe_decode_matches_forward_without_drops():
+    cfg = dataclasses.replace(
+        get_config("arctic_480b", smoke=True), moe_capacity_factor=16.0
+    )
+    params = lm.init_params(cfg, jax.random.PRNGKey(42))
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+    full = np.asarray(
+        lm.forward(params, {"tokens": toks}, cfg, mode="train")["logits"], np.float32
+    )
+    cache = lm.init_cache(cfg, b, s)
+    step = jax.jit(lambda p, c, bt: lm.decode_step(p, c, bt, cfg))
+    for t in range(s):
+        logits, cache = step(
+            params, cache, {"tokens": toks[:, t : t + 1], "cache_pos": jnp.int32(t)}
+        )
+        assert np.max(np.abs(np.asarray(logits[:, 0], np.float32) - full[:, t])) < 2e-2
+
+
+def test_prefill_cache_continues_decode():
+    """prefill(s tokens) then decode token s must equal full forward."""
+    cfg = get_config("qwen2_5_14b", smoke=True)
+    params = lm.init_params(cfg, jax.random.PRNGKey(7))
+    b, s = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s + 1), 0, cfg.vocab_size)
+    full = np.asarray(
+        lm.forward(params, {"tokens": toks}, cfg, mode="train")["logits"], np.float32
+    )
+    out = lm.forward(params, {"tokens": toks[:, :s]}, cfg, mode="prefill")
+    np.testing.assert_allclose(
+        np.asarray(out["logits"][:, -1], np.float32), full[:, s - 1], atol=2e-2
+    )
+    # grow the prefill cache to s+1 slots and take one decode step
+    cache = {
+        k: jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, 1), (0, 0)))
+        for k, v in out["cache"].items()
+    }
+    logits, _ = lm.decode_step(
+        params, cache, {"tokens": toks[:, s : s + 1], "cache_pos": jnp.int32(s)}, cfg
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0], np.float32), full[:, s], atol=2e-2
+    )
+
+
+def test_vlm_loss_uses_text_positions_only():
+    cfg = get_config("qwen2_vl_72b", smoke=True)
+    params = lm.init_params(cfg, KEY)
+    batch = _batch(cfg, 2, 64)
+    loss, metrics = lm.loss_fn(params, batch, cfg)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_encoder_only_bidirectional():
+    """hubert: flipping a late frame must change logits of an early position
+    (bidirectional attention), unlike causal archs."""
+    cfg = get_config("hubert_xlarge", smoke=True)
+    params = lm.init_params(cfg, KEY)
+    b, s = 1, 32
+    frames = jax.random.normal(KEY, (b, s, cfg.frontend_dim))
+    out1 = lm.forward(params, {"frames": frames}, cfg, mode="train")["logits"]
+    frames2 = frames.at[:, -1, :].set(10.0)
+    out2 = lm.forward(params, {"frames": frames2}, cfg, mode="train")["logits"]
+    assert float(jnp.max(jnp.abs(out1[:, 0] - out2[:, 0]))) > 1e-6

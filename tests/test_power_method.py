@@ -1,0 +1,71 @@
+"""Distributed power method: accuracy, two-sided sign property, K(t) regimes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import power_method, sphere_vector, top_singular_pair
+
+
+@pytest.mark.parametrize("d,m", [(30, 20), (64, 64), (17, 51)])
+def test_converges_to_top_pair(d, m):
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (d, m))
+    u, s, vt = np.linalg.svd(np.asarray(a), full_matrices=False)
+    res = top_singular_pair(a, jax.random.PRNGKey(1), num_iters=100)
+    assert res.sigma == pytest.approx(s[0], rel=1e-4)
+    # direction match up to sign (sign fixed by two-sided iteration: u^T A v >= 0)
+    assert abs(float(jnp.dot(res.u, u[:, 0]))) > 0.999
+    assert abs(float(jnp.dot(res.v, vt[0]))) > 0.999
+    assert float(res.u @ np.asarray(a) @ res.v) >= 0.0
+
+
+def test_sigma_underestimates_monotone():
+    """||A^T u_K|| is nondecreasing in K and bounded by sigma1."""
+    a = jax.random.normal(jax.random.PRNGKey(3), (40, 30))
+    s1 = float(jnp.linalg.svd(a, compute_uv=False)[0])
+    prev = 0.0
+    for k in [1, 2, 4, 8, 16]:
+        res = top_singular_pair(a, jax.random.PRNGKey(7), num_iters=k)
+        sig = float(res.sigma)
+        assert sig <= s1 * (1 + 1e-5)
+        assert sig >= prev - 1e-5
+        prev = sig
+
+
+def test_kuczynski_expected_error_bound():
+    """Thm (Kuczyński & Woźniakowski): E|sigma_est-s1|/s1 <= 0.871 ln(m)/(K-1)
+    for the eigenvalue estimate of A^T A. Monte-Carlo over random starts."""
+    key = jax.random.PRNGKey(11)
+    a = jax.random.normal(key, (50, 32))
+    s1sq = float(jnp.linalg.svd(a, compute_uv=False)[0]) ** 2
+    m = 32
+    for K in (3, 6, 12):
+        errs = []
+        for trial in range(64):
+            res = top_singular_pair(a, jax.random.fold_in(key, 1000 + trial * 13 + K), num_iters=K)
+            errs.append(abs(float(res.sigma) ** 2 - s1sq) / s1sq)
+        bound = 0.871 * np.log(m) / (K - 1)
+        assert np.mean(errs) <= bound, (K, np.mean(errs), bound)
+
+
+def test_sphere_vector_unit_norm():
+    for i in range(5):
+        v = sphere_vector(jax.random.PRNGKey(i), 33)
+        assert float(jnp.linalg.norm(v)) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_worker_weight_zero_removes_contribution():
+    """Straggler masking: weight=0 must reproduce the masked-out result."""
+    a = jax.random.normal(jax.random.PRNGKey(0), (20, 10))
+    res_w = power_method.power_iterations(
+        lambda v: a @ v, lambda u: a.T @ u,
+        sphere_vector(jax.random.PRNGKey(1), 10), 50,
+        worker_weight=jnp.float32(0.5),  # scale-invariant: same direction
+    )
+    res = power_method.power_iterations(
+        lambda v: a @ v, lambda u: a.T @ u,
+        sphere_vector(jax.random.PRNGKey(1), 10), 50,
+    )
+    np.testing.assert_allclose(res_w.u, res.u, atol=1e-5)
+    assert float(res_w.sigma) == pytest.approx(0.5 * float(res.sigma), rel=1e-5)

@@ -1,0 +1,173 @@
+"""Hypothesis property tests on the system's core invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import low_rank, tasks
+from repro.core.trace_norm import trace_norm as exact_trace_norm
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+dims = st.integers(min_value=2, max_value=12)
+gammas = st.lists(st.floats(0.01, 1.0), min_size=1, max_size=6)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+# ---------------------------------------------------------------------------
+# FactoredIterate invariants
+# ---------------------------------------------------------------------------
+
+
+@given(d=dims, m=dims, gs=gammas, seed=seeds)
+def test_factored_store_matches_dense_recurrence(d, m, gs, seed):
+    """alpha/s bookkeeping == literal dense FW recurrence for any gamma seq."""
+    mu = 1.7
+    it = low_rank.init(len(gs), d, m)
+    w = jnp.zeros((d, m))
+    for i, g in enumerate(gs):
+        u = _rand(seed + 2 * i, (d,))
+        u = u / jnp.linalg.norm(u)
+        v = _rand(seed + 2 * i + 1, (m,))
+        v = v / jnp.linalg.norm(v)
+        it = low_rank.fw_update(it, u, v, jnp.float32(g), mu)
+        w = (1 - g) * w + g * (-mu) * jnp.outer(u, v)
+    np.testing.assert_allclose(low_rank.materialize(it), w, rtol=2e-3, atol=2e-4)
+
+
+@given(d=dims, m=dims, gs=gammas, seed=seeds)
+def test_factored_iterate_stays_feasible(d, m, gs, seed):
+    """Any convex combination of -mu u v^T stays in the mu trace-norm ball."""
+    mu = 2.5
+    it = low_rank.init(len(gs), d, m)
+    for i, g in enumerate(gs):
+        u = _rand(seed + 3 * i, (d,))
+        u = u / jnp.linalg.norm(u)
+        v = _rand(seed + 3 * i + 1, (m,))
+        v = v / jnp.linalg.norm(v)
+        it = low_rank.fw_update(it, u, v, jnp.float32(g), mu)
+    w = low_rank.materialize(it)
+    assert float(exact_trace_norm(w)) <= mu * (1 + 1e-4)
+    # factored upper bound dominates
+    assert float(low_rank.trace_norm_upper_bound(it)) >= float(
+        exact_trace_norm(w)) - 1e-4
+
+
+@given(d=dims, m=dims, seed=seeds)
+def test_factored_matvec_agrees_with_dense(d, m, seed):
+    it = low_rank.init(4, d, m)
+    for i in range(3):
+        u = _rand(seed + 5 * i, (d,))
+        u = u / jnp.linalg.norm(u)
+        v = _rand(seed + 5 * i + 1, (m,))
+        v = v / jnp.linalg.norm(v)
+        it = low_rank.fw_update(it, u, v, jnp.float32(0.3), 1.0)
+    w = low_rank.materialize(it)
+    x = _rand(seed + 100, (m,))
+    xt = _rand(seed + 101, (d,))
+    xm = _rand(seed + 102, (7, d))
+    np.testing.assert_allclose(low_rank.matvec(it, x), w @ x, rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(low_rank.rmatvec(it, xt), w.T @ xt, rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(
+        low_rank.right_multiply(it, xm), xm @ w, rtol=2e-3, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Task operator invariants (implicit gradient == dense gradient)
+# ---------------------------------------------------------------------------
+
+
+@given(seed=seeds, n=st.integers(4, 30), d=dims, m=dims)
+def test_mtls_operator_consistency(seed, n, d, m):
+    x = _rand(seed, (n, d))
+    y = _rand(seed + 1, (n, m))
+    task = tasks.MultiTaskLeastSquares(d=d, m=m)
+    s = task.init_state(x, y)
+    g = np.asarray(task.local_grad(s))
+    v = _rand(seed + 2, (m,))
+    u = _rand(seed + 3, (d,))
+    np.testing.assert_allclose(task.matvec(s, v), g @ np.asarray(v), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(task.rmatvec(s, u), g.T @ np.asarray(u), rtol=2e-3, atol=2e-3)
+    # <W, grad> with W=0 must be 0 at init
+    assert float(task.inner_w_grad(s)) == 0.0
+
+
+@given(seed=seeds, n=st.integers(4, 30), d=dims, m=st.integers(3, 12))
+def test_logistic_operator_consistency(seed, n, d, m):
+    x = _rand(seed, (n, d))
+    yv = jax.random.randint(jax.random.PRNGKey(seed + 1), (n,), 0, m)
+    task = tasks.MultinomialLogistic(d=d, m=m)
+    s = task.init_state(x, yv)
+    g = np.asarray(task.local_grad(s))
+    v = _rand(seed + 2, (m,))
+    u = _rand(seed + 3, (d,))
+    np.testing.assert_allclose(task.matvec(s, v), g @ np.asarray(v), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(task.rmatvec(s, u), g.T @ np.asarray(u), rtol=2e-3, atol=2e-3)
+
+
+@given(seed=seeds, n=st.integers(4, 20), d=dims, m=dims,
+       g1=st.floats(0.05, 1.0), g2=st.floats(0.05, 1.0))
+def test_mtls_recursive_update_equals_recompute(seed, n, d, m, g1, g2):
+    """App-B sufficient-information recursion == recompute from scratch."""
+    mu = 1.3
+    x = _rand(seed, (n, d))
+    y = _rand(seed + 1, (n, m))
+    task = tasks.MultiTaskLeastSquares(d=d, m=m)
+    s = task.init_state(x, y)
+    w = jnp.zeros((d, m))
+    for i, g in enumerate((g1, g2)):
+        u = _rand(seed + 7 * i, (d,))
+        u = u / jnp.linalg.norm(u)
+        v = _rand(seed + 7 * i + 1, (m,))
+        v = v / jnp.linalg.norm(v)
+        s = task.update(s, u, v, jnp.float32(g), mu)
+        w = (1 - g) * w + g * (-mu) * jnp.outer(u, v)
+    np.testing.assert_allclose(s.r, x @ w - y, rtol=3e-3, atol=3e-3)
+
+
+@given(seed=seeds, n=st.integers(4, 20), d=dims, m=st.integers(3, 10),
+       g1=st.floats(0.05, 1.0))
+def test_logistic_recursive_update_equals_recompute(seed, n, d, m, g1):
+    mu = 2.0
+    x = _rand(seed, (n, d))
+    yv = jax.random.randint(jax.random.PRNGKey(seed + 1), (n,), 0, m)
+    task = tasks.MultinomialLogistic(d=d, m=m)
+    s = task.init_state(x, yv)
+    u = _rand(seed + 3, (d,))
+    u = u / jnp.linalg.norm(u)
+    v = _rand(seed + 4, (m,))
+    v = v / jnp.linalg.norm(v)
+    s = task.update(s, u, v, jnp.float32(g1), mu)
+    w = g1 * (-mu) * jnp.outer(u, v)
+    np.testing.assert_allclose(s.z, x @ w, rtol=3e-3, atol=3e-3)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline invariants
+# ---------------------------------------------------------------------------
+
+
+@given(step=st.integers(0, 10_000), host=st.integers(0, 3))
+def test_data_pipeline_deterministic(step, host):
+    from repro.configs import get_config
+    from repro.data import SyntheticLMStream
+    from repro.models.config import ShapeSpec
+
+    cfg = get_config("qwen2_1_5b", smoke=True)
+    shape = ShapeSpec("t", "train", 32, 8)
+    s1 = SyntheticLMStream(cfg, shape, host_id=host, num_hosts=4)
+    s2 = SyntheticLMStream(cfg, shape, host_id=host, num_hosts=4)
+    b1, b2 = s1.batch_for_step(step), s2.batch_for_step(step)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < cfg.vocab_size
+    # label alignment: labels are next tokens
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])

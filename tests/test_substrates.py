@@ -1,0 +1,218 @@
+"""Substrate tests: checkpoint store, optimizer, compression, HLO analyzer,
+sharding-rule coverage."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import hlo_analysis
+from repro.launch.params import param_pspecs
+from repro.launch.sharding import pspec, use_mesh
+from repro.models import lm
+from repro.optim import adamw, compression, schedule
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_and_async():
+    tree = {"a": jnp.arange(12.0).reshape(3, 4), "b": {"c": jnp.ones((5,), jnp.int32)}}
+    with tempfile.TemporaryDirectory() as d:
+        st = CheckpointStore(d)
+        st.save_async(3, tree, extra={"rng": 7})
+        st.wait()
+        st.save(10, tree)
+        assert st.latest_step() == 10
+        step, restored, extra = st.restore(3)
+        assert step == 3 and extra == {"rng": 7}
+        np.testing.assert_array_equal(restored["a"], tree["a"])
+
+
+def test_checkpoint_namedtuple_state_needs_like():
+    tree = {"opt": adamw.init({"w": jnp.ones((3,))})}
+    with tempfile.TemporaryDirectory() as d:
+        st = CheckpointStore(d)
+        st.save(1, tree)
+        with pytest.raises(ValueError):
+            st.restore(1)
+        _, restored, _ = st.restore(1, like=tree)
+        assert int(restored["opt"].step) == 0
+
+
+def test_checkpoint_atomicity_leaves_no_tmp():
+    with tempfile.TemporaryDirectory() as d:
+        st = CheckpointStore(d)
+        st.save(2, {"x": jnp.zeros((4,))})
+        import pathlib
+
+        assert not list(pathlib.Path(d).glob(".tmp_*"))
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw.init(params)
+    for _ in range(200):
+        g = {"w": 2 * params["w"]}
+        params, opt = adamw.update(g, opt, params, lr=5e-2, weight_decay=0.0)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.15
+
+
+def test_cosine_schedule_shape():
+    s = schedule.cosine_with_warmup(
+        jnp.arange(100), peak_lr=1.0, warmup=10, total=100
+    )
+    assert float(s[0]) == 0.0
+    assert float(s[10]) == pytest.approx(1.0, rel=1e-3)
+    assert float(s[99]) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# PowerSGD compression
+# ---------------------------------------------------------------------------
+
+
+def test_powersgd_rank_improves_approximation():
+    g = jax.random.normal(KEY, (64, 48))
+    errs = []
+    for rank in (1, 4, 16):
+        st = compression.init({"g": g}, rank=rank, min_size=16)
+        approx, _ = compression.compress_and_sync({"g": g}, st, min_size=16)
+        errs.append(float(jnp.linalg.norm(approx["g"] - g) / jnp.linalg.norm(g)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_powersgd_error_feedback_recovers_signal():
+    """Error feedback: the time-average of compressed updates converges to
+    the true (constant) gradient at rate ||e_eq||/T, and the error-feedback
+    buffer plateaus (PowerSGD self-stabilizes once e dominates M)."""
+    g = jax.random.normal(KEY, (32, 24))
+    st = compression.init({"g": g}, rank=4, min_size=16)
+    sent = jnp.zeros_like(g)
+    rels, errs = [], []
+    for i in range(80):
+        out, st = compression.compress_and_sync({"g": g}, st, min_size=16)
+        sent = sent + out["g"]
+        rels.append(float(jnp.linalg.norm(sent / (i + 1) - g) / jnp.linalg.norm(g)))
+        errs.append(float(jnp.linalg.norm(st.error["g"])))
+    assert rels[-1] < 0.35, rels[-1]
+    assert rels[-1] < rels[20] < rels[5]  # monotone-ish convergence
+    assert errs[-1] < errs[40] * 1.5  # error buffer bounded (plateau)
+
+
+def test_powersgd_wire_bytes_table():
+    params = {"big": jnp.zeros((512, 256)), "small": jnp.zeros((8,))}
+    wb = compression.wire_bytes(params, rank=4, min_size=4096)
+    assert wb["compressed"] < wb["dense"] / 10
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer
+# ---------------------------------------------------------------------------
+
+
+def test_hlo_walker_counts_scan_flops():
+    def f(ws, x):
+        def body(c, w):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out.sum()
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((10, 64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((32, 64), jnp.float32),
+    ).compile()
+    res = hlo_analysis.analyze(compiled.as_text())
+    want = 10 * 2 * 32 * 64 * 64
+    assert res["flops"] == pytest.approx(want, rel=0.01), res["flops"]
+
+
+def test_hlo_walker_nested_scan():
+    def f(ws, x):
+        def outer(c, w3):
+            def inner(ci, w):
+                return ci @ w, None
+            co, _ = jax.lax.scan(inner, c, w3)
+            return co, None
+        out, _ = jax.lax.scan(outer, x, ws)
+        return out.sum()
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((4, 3, 16, 16), jnp.float32),
+        jax.ShapeDtypeStruct((8, 16), jnp.float32),
+    ).compile()
+    res = hlo_analysis.analyze(compiled.as_text())
+    want = 4 * 3 * 2 * 8 * 16 * 16
+    assert res["flops"] == pytest.approx(want, rel=0.05), res["flops"]
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules cover every arch's parameters
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_pspecs_cover_all_leaves(arch):
+    cfg = get_config(arch, smoke=True)
+    aparams = jax.eval_shape(lambda k: lm.init_params(cfg, k), KEY)
+    specs = param_pspecs(aparams)
+    flat_p = jax.tree.leaves(aparams)
+    from jax.sharding import PartitionSpec as P
+
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for leaf, spec in zip(flat_p, flat_s):
+        assert len(spec) <= leaf.ndim, (spec, leaf.shape)
+
+
+def test_pspec_rules_respect_mesh_axes():
+    """Outside a mesh everything resolves to unconstrained; 1D mesh drops
+    the absent axes from tuples."""
+    from jax.sharding import PartitionSpec as P
+
+    assert pspec("batch", None) == P(None, None)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
+    with use_mesh(mesh):
+        assert pspec("batch", None) == P("data", None)
+        assert pspec("heads") == P(None)  # "model" absent from this mesh
+
+
+# ---------------------------------------------------------------------------
+# Hybrid optimizer (AdamW backbone + DFW-TRACE trace-norm head)
+# ---------------------------------------------------------------------------
+
+
+def test_hybrid_optimizer_constrains_head():
+    from repro.core.trace_norm import trace_norm as exact_tn
+    from repro.data import SyntheticLMStream
+    from repro.models.config import ShapeSpec
+    from repro.optim import hybrid
+
+    cfg = get_config("codeqwen1_5_7b", smoke=True)  # untied head
+    params = lm.init_params(cfg, KEY)
+    mu = 5.0
+    step = jax.jit(hybrid.make_hybrid_train_step(cfg, mu=mu, peak_lr=1e-3))
+    state = hybrid.init(params)
+    stream = SyntheticLMStream(cfg, ShapeSpec("t", "train", 64, 4))
+    losses = []
+    for t in range(8):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch_for_step(t).items()}
+        params, state, metrics = step(params, state, batch, jax.random.PRNGKey(5))
+        losses.append(float(metrics["loss"]))
+        assert bool(jnp.isfinite(metrics["loss"]))
+    # after the first FW step (gamma=1) the head is exactly feasible
+    tn = float(exact_tn(params["unembed"].astype(jnp.float32)))
+    assert tn <= mu * (1 + 1e-3), tn
+    assert int(state.fw_step) == 8 and int(state.adam.step) == 8
