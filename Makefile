@@ -1,0 +1,23 @@
+# One-word entry points for the checks CI and contributors run.
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke lint
+
+# Tier-1 verify (see ROADMAP.md): full pytest suite, stop at first failure.
+test:
+	$(PYTHON) -m pytest -x -q
+
+# Fast pass over the paper-figure benchmark suites (small problem sizes).
+bench-smoke:
+	$(PYTHON) -m benchmarks.run --fast
+
+# Syntax sweep; uses ruff/flake8 when available, byte-compilation otherwise.
+lint:
+	@if $(PYTHON) -m ruff --version >/dev/null 2>&1; then \
+		$(PYTHON) -m ruff check src tests benchmarks examples; \
+	elif $(PYTHON) -m flake8 --version >/dev/null 2>&1; then \
+		$(PYTHON) -m flake8 src tests benchmarks examples; \
+	else \
+		$(PYTHON) -m compileall -q src tests benchmarks examples && echo "lint: compileall clean (install ruff for style checks)"; \
+	fi

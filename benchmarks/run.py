@@ -14,6 +14,7 @@ def main() -> None:
 
     from . import (
         comm_cost,
+        dfw_scaling,
         imagenet_head,
         kernel_bench,
         logistic_convergence,
@@ -32,6 +33,8 @@ def main() -> None:
         "fig3_imagenet_head": (lambda: imagenet_head.run(epochs=15, m=50, tokens=2048))
         if args.fast else imagenet_head.run,
         "fig4_scaling": scaling.run,
+        "fig4_dfw_scaling": (lambda: dfw_scaling.run(n=2048, d=64, m=32, epochs=5))
+        if args.fast else dfw_scaling.run,
         "thm2_power_accuracy": power_accuracy.run,
         "kernels": kernel_bench.run,
         "roofline": roofline.run,

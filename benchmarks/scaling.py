@@ -26,6 +26,7 @@ import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.core import tasks, frank_wolfe, low_rank
 from repro.launch import hlo_analysis
+from repro.compat import shard_map_compat
 
 NDEVN = __NDEV__
 n, d, m, K = 4096, 256, 128, 2
@@ -34,14 +35,14 @@ if NDEVN == 1:
     step = frank_wolfe.make_epoch_step(task, 1.0, K, step_size="linesearch")
     wrapped = step
 else:
-    mesh = jax.make_mesh((NDEVN,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((NDEVN,), ("data",))
     ss = tasks.MTLSState(x=P("data"), y=P("data"), r=P("data"))
     isp = low_rank.FactoredIterate(u=P(), s=P(), v=P(), alpha=P(), count=P())
     asp = frank_wolfe.EpochAux(P(), P(), P(), P())
     step = frank_wolfe.make_epoch_step(task, 1.0, K, step_size="linesearch",
                                        axis_name="data")
-    wrapped = jax.shard_map(step, mesh=mesh, in_specs=(ss, isp, P(), P()),
-                            out_specs=(ss, isp, asp), check_vma=False)
+    wrapped = shard_map_compat(step, mesh, in_specs=(ss, isp, P(), P()),
+                               out_specs=(ss, isp, asp))
 x = jax.ShapeDtypeStruct((n, d), jnp.float32)
 y = jax.ShapeDtypeStruct((n, m), jnp.float32)
 st = tasks.MTLSState(x=x, y=y, r=y)

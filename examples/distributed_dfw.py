@@ -1,0 +1,74 @@
+"""Distributed DFW-Trace end to end on 8 simulated workers.
+
+Runs the *same* shard_map program a real multi-host launch would lower, on
+fake CPU devices: the sample axis is sharded row-wise across 8 workers, each
+FW epoch exchanges only the O(d+m) power-iteration vectors via psum (never a
+d x m gradient), and the paper's sampled-worker/straggler mode drops workers
+per epoch without derailing convergence.
+
+Run:  PYTHONPATH=src python examples/distributed_dfw.py
+(sets XLA_FLAGS itself — run as a standalone script)
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import low_rank, tasks  # noqa: E402
+from repro.launch import dfw  # noqa: E402
+
+# --- paper §5.1 synthetic multitask least squares --------------------------
+n, d, m, rank = 4096, 64, 48, 8
+key = jax.random.PRNGKey(0)
+ku, kv, kx = jax.random.split(key, 3)
+u = jnp.linalg.qr(jax.random.normal(ku, (d, rank)))[0]
+v = jnp.linalg.qr(jax.random.normal(kv, (m, rank)))[0]
+s = jnp.linspace(1.0, 0.1, rank)
+w_true = (u * (s / jnp.sum(s))) @ v.T  # ||W*||_* = 1, rank 8
+x = jax.random.normal(kx, (n, d))
+y = x @ w_true
+
+cfg = dfw.DFWConfig(mu=1.0, num_epochs=30, schedule="log",
+                    step_size="linesearch")
+
+# --- serial reference vs 8-way sharded run ---------------------------------
+serial = dfw.fit_serial(tasks.MultiTaskLeastSquares(d=d, m=m), x, y,
+                        cfg=cfg, key=jax.random.PRNGKey(1))
+shard = dfw.fit(tasks.MultiTaskLeastSquares(d=d, m=m), x, y,
+                cfg=cfg, key=jax.random.PRNGKey(1), num_workers=8)
+print(f"{'epoch':>5} {'K(t)':>4} {'serial loss':>12} {'sharded loss':>12} "
+      f"{'gap':>10}")
+for t in range(0, cfg.num_epochs, 5):
+    print(f"{t:>5} {shard.history['k'][t]:>4} "
+          f"{serial.history['loss'][t]:>12.5f} "
+          f"{shard.history['loss'][t]:>12.5f} "
+          f"{shard.history['gap'][t]:>10.5f}")
+drift = max(abs(a - b) / (abs(a) + 1e-12)
+            for a, b in zip(serial.history["loss"], shard.history["loss"]))
+print(f"max relative serial-vs-sharded loss drift: {drift:.2e}")
+assert drift < 1e-4
+
+w_hat = low_rank.materialize(shard.iterate)
+rel = float(jnp.linalg.norm(w_hat - w_true) / jnp.linalg.norm(w_true))
+print(f"recovery ||W-W*||/||W*|| = {rel:.3f}, rank <= {int(shard.iterate.count)}")
+
+# --- sampled-worker (straggler) mode ---------------------------------------
+cfg_s = dfw.DFWConfig(mu=1.0, num_epochs=30, schedule="log",
+                      step_size="linesearch", sample_prob=0.6)
+sampled = dfw.fit(tasks.MultiTaskLeastSquares(d=d, m=m), x, y,
+                  cfg=cfg_s, key=jax.random.PRNGKey(1), num_workers=8)
+alive = jnp.sum(sampled.masks > 0, axis=1)
+print(f"sampled-worker mode (p=0.6): alive/epoch min={int(jnp.min(alive))} "
+      f"mean={float(jnp.mean(alive)):.1f}; "
+      f"final loss {sampled.history['loss'][-1]:.4f} "
+      f"(full-participation {shard.history['loss'][-1]:.4f})")
+assert sampled.history["loss"][-1] < 0.1 * sampled.history["loss"][0]
+
+# --- communication accounting (paper Table 1) ------------------------------
+k_total = sum(shard.history["k"])
+bytes_per_iter = 2 * (d + m) * 4  # psum of u (d,) + v (m,) in f32
+print(f"total power iterations: {k_total}; per-worker wire traffic "
+      f"{k_total * bytes_per_iter / 1e3:.1f} KB vs naive gradient sync "
+      f"{cfg.num_epochs * d * m * 4 / 1e3:.1f} KB")

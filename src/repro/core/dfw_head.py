@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map_compat
 from repro.models import lm
 
 from . import frank_wolfe, low_rank, tasks
@@ -96,11 +97,10 @@ def sharded_fit(
     aux_specs = EpochAux(P(), P(), P(), P())
 
     def wrapper(step):
-        return jax.shard_map(
-            step, mesh=mesh,
+        return shard_map_compat(
+            step, mesh,
             in_specs=(state_specs, it_specs, P(), P()),
             out_specs=(state_specs, it_specs, aux_specs),
-            check_vma=False,
         )
 
     state = task.init_state(

@@ -4,7 +4,10 @@
 the implicit gradient -> step size (default 2/(t+2) or closed-form line
 search) -> sufficient-information update + factored-iterate append. The same
 function runs serially (axis_name=None) or inside shard_map over the data mesh
-axes — the paper's BSP master is just ``psum``.
+axes — the paper's BSP master is just ``psum``. The multi-device driver that
+does the wrapping (mesh build, row-wise state sharding, worker sampling,
+Pallas-kernelized matvecs) lives in ``launch/dfw.py``; ``fit`` below is the
+serial/single-process driver.
 """
 from __future__ import annotations
 
@@ -149,8 +152,20 @@ def fit(
     epoch_wrapper: Optional[Callable[[Callable], Callable]] = None,
     callback: Optional[Callable[[int, EpochAux], None]] = None,
 ) -> FitResult:
-    """Run DFW-TRACE for ``num_epochs``. ``epoch_wrapper`` lets callers wrap
-    the jitted epoch in shard_map (see launch/dfw.py); identity by default."""
+    """Run DFW-TRACE for ``num_epochs``.
+
+    ``epoch_wrapper`` contract: a function ``wrap(step) -> step'`` applied to
+    each freshly built epoch *before* ``jax.jit`` (one wrap per distinct K(t)
+    value). ``step'`` must preserve the positional signature
+    ``(state, iterate, t, key) -> (state, iterate, aux)`` with ``t`` a f32
+    scalar and ``key`` a replicated PRNG key; identity by default. The
+    canonical non-trivial wrapper is shard_map over the data mesh with the
+    task state row-sharded and iterate/scalars replicated — that is what
+    ``launch/dfw.py`` (and ``core/dfw_head.sharded_fit``) install, paired
+    with ``axis_name`` naming the mesh axes so the epoch's psums resolve.
+    Callers needing extra per-epoch inputs (e.g. the worker-sampling masks of
+    the paper's straggler mode) should drive ``make_epoch_step`` directly, as
+    ``launch/dfw.fit`` does, rather than thread them through this loop."""
     sched = k_schedule(schedule)
     it = low_rank.init(num_epochs, task.d, task.m)
     compiled: Dict[int, Callable] = {}

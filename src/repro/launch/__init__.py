@@ -1,3 +1,17 @@
+"""Execution layer: meshes, sharding rules, and the distributed DFW driver.
+
+``dfw`` (the distributed DFW-Trace driver) is imported lazily via
+``__getattr__`` so that ``import repro.launch`` stays light for users who
+only need the sharding rules.
+"""
 from . import sharding
 
-__all__ = ["sharding"]
+__all__ = ["dfw", "mesh", "sharding"]
+
+
+def __getattr__(name):
+    if name in ("dfw", "mesh"):
+        import importlib
+
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,424 @@
+"""Distributed DFW-Trace execution layer (paper Algorithm 2, end to end).
+
+``core/frank_wolfe.py`` builds the *math* of one FW epoch; this module builds
+the *machine* around it:
+
+- a 1-D data mesh over the available devices (``launch/mesh.py``),
+- row-wise sharding of the task state across workers (each worker owns a
+  contiguous shard of the sample axis, exactly the paper's data partition),
+- the BSP master realized as ``psum`` inside ``shard_map`` — per epoch only
+  the O(d+m) power-iteration vectors cross the network, never a d x m
+  gradient (paper Table 1),
+- the paper's straggler/sampled-worker mode: a per-epoch Bernoulli schedule
+  over workers feeds the ``worker_weight`` mask of the core epoch, with
+  optional inverse-participation reweighting so aggregates stay unbiased,
+- kernelized matvecs: the power-iteration hot path is routed through the
+  ``kernels/power_matvec`` Pallas ops (one HBM pass per call on TPU, jnp
+  reference fallback elsewhere), with an up-front correctness check against
+  the task's pure-jnp operator chain (the same oracle as
+  ``kernels/power_matvec/ref.py``).
+
+The serial driver (``frank_wolfe.fit``) and this sharded driver execute the
+same jitted epoch function; they differ only in the ``epoch_wrapper`` layer,
+so their loss/gap trajectories agree to float-summation-order tolerance.
+
+Typical use (8 simulated hosts; see ``examples/distributed_dfw.py``)::
+
+    from repro.launch import dfw
+    cfg = dfw.DFWConfig(mu=1.0, num_epochs=20, schedule="log",
+                        step_size="linesearch", sample_prob=0.8)
+    res = dfw.fit(task, x, y, cfg=cfg, key=key, num_workers=8)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..compat import shard_map_compat
+from ..core import frank_wolfe, low_rank, tasks
+from ..core.frank_wolfe import EpochAux
+from ..core.power_method import sphere_vector
+from ..kernels.power_matvec import ops as pm_ops
+from . import mesh as mesh_lib
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DFWConfig:
+    """Knobs of one distributed DFW-Trace run.
+
+    ``sample_prob`` < 1 enables the paper's sampled-worker/straggler mode:
+    each epoch, every worker participates independently with this probability
+    (at least one worker is always kept). ``reweight`` scales the survivors
+    by num_workers/num_alive so psum'd aggregates (loss, gap, line-search
+    terms) remain estimates of the full-data quantities.
+    """
+
+    mu: float
+    num_epochs: int
+    schedule: str = "const:2"  # K(t); see frank_wolfe.k_schedule
+    step_size: str = "default"  # "default" (2/(t+2)) or "linesearch"
+    data_axis: str = "data"
+    sample_prob: float = 1.0
+    reweight: bool = True
+    kernelize: bool = True  # route matvecs through kernels/power_matvec
+    use_pallas: Optional[bool] = None  # None = auto (Pallas on TPU, jnp ref else)
+    interpret: bool = False  # Pallas interpreter mode (debugging)
+    verify_kernels: bool = True  # up-front kernel-vs-jnp agreement check
+    max_rank: Optional[int] = None  # factored-iterate capacity (default epochs)
+
+
+@dataclasses.dataclass
+class DFWFitResult:
+    iterate: low_rank.FactoredIterate
+    state: PyTree
+    history: Dict[str, list]  # loss/gap/sigma/gamma/k per epoch
+    masks: Optional[jax.Array]  # (num_epochs, num_workers) worker weights
+
+
+# ---------------------------------------------------------------------------
+# Mesh + row-wise state sharding
+# ---------------------------------------------------------------------------
+
+
+def data_mesh(num_workers: int, axis: str = "data") -> Mesh:
+    """1-D mesh over the first ``num_workers`` devices (the paper's workers)."""
+    if num_workers > len(jax.devices()):
+        raise ValueError(
+            f"num_workers={num_workers} > visible devices={len(jax.devices())}; "
+            "on CPU set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            "before the first jax import"
+        )
+    return mesh_lib.make_mesh((num_workers,), (axis,))
+
+
+def row_specs(tree: PyTree, axis: str) -> PyTree:
+    """PartitionSpec pytree sharding every leaf's leading (sample) dim."""
+    return jax.tree.map(lambda _: P(axis), tree)
+
+
+def replicated_specs(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def shard_rowwise(mesh: Mesh, tree: PyTree, axis: str = "data") -> PyTree:
+    """Place every leaf row-sharded over ``axis``; leading dims must divide."""
+    nw = mesh.shape[axis]
+
+    def place(x):
+        x = jnp.asarray(x)
+        if x.shape[0] % nw:
+            raise ValueError(
+                f"leading dim {x.shape[0]} not divisible by {nw} workers; "
+                "pad or trim the sample axis before sharding"
+            )
+        return jax.device_put(x, NamedSharding(mesh, P(axis)))
+
+    return jax.tree.map(place, tree)
+
+
+# ---------------------------------------------------------------------------
+# Kernelized tasks — power_matvec Pallas ops on the power-iteration hot path
+# ---------------------------------------------------------------------------
+
+
+class KernelizedTask:
+    """Delegating task wrapper that routes the streaming matvecs of the
+    power iteration through ``kernels/power_matvec`` (paper Alg. 2 lines 5-10,
+    the per-epoch hot path).
+
+    On TPU each call is a single-HBM-pass blocked Pallas kernel; elsewhere the
+    ops dispatch to the pure-jnp reference (``power_matvec/ref.py``), so the
+    wrapper is a no-op semantically everywhere. Everything except
+    matvec/rmatvec is delegated to the base task untouched.
+    """
+
+    def __init__(
+        self,
+        base,
+        *,
+        use_pallas: Optional[bool] = None,
+        interpret: bool = False,
+    ):
+        self._base = base
+        self._kw = dict(use_pallas=use_pallas, interpret=interpret)
+
+    def __getattr__(self, name):
+        return getattr(self._base, name)
+
+    # -- implicit-gradient operator, kernel-routed per state type ----------
+    # (MTLSDenseState is not handled: the dense task lacks the epoch
+    # interface — local_loss/inner_w_grad — so the drivers here can't run it.)
+    def matvec(self, s, v: jax.Array) -> jax.Array:
+        if isinstance(s, tasks.MTLSState):  # A = X^T R
+            return pm_ops.rmatvec(s.x, pm_ops.matvec(s.r, v, **self._kw), **self._kw)
+        if isinstance(s, tasks.LogisticState):  # A = X^T (P - H)
+            pv = self._base._probs(s) @ v - v[s.y]
+            return pm_ops.rmatvec(s.x, pv, **self._kw)
+        return self._base.matvec(s, v)
+
+    def rmatvec(self, s, u: jax.Array) -> jax.Array:
+        if isinstance(s, tasks.MTLSState):
+            return pm_ops.rmatvec(s.r, pm_ops.matvec(s.x, u, **self._kw), **self._kw)
+        if isinstance(s, tasks.LogisticState):
+            t = pm_ops.matvec(s.x, u, **self._kw)
+            p = self._base._probs(s)
+            return p.T @ t - jnp.zeros((self._base.m,), t.dtype).at[s.y].add(t)
+        return self._base.rmatvec(s, u)
+
+
+def kernelize(task, *, use_pallas: Optional[bool] = None, interpret: bool = False):
+    """Wrap ``task`` so its power-iteration matvecs run through the Pallas ops."""
+    if isinstance(task, KernelizedTask):
+        return task
+    return KernelizedTask(task, use_pallas=use_pallas, interpret=interpret)
+
+
+def verify_kernelized(
+    task,
+    ktask: KernelizedTask,
+    state: PyTree,
+    key: jax.Array,
+    *,
+    tol: float = 1e-4,
+) -> float:
+    """Assert kernel-routed matvec/rmatvec match the base task's pure-jnp
+    operator chain (the same oracle ``kernels/power_matvec/ref.py`` encodes)
+    on random unit probes. Returns the max relative error observed."""
+    kv, ku = jax.random.split(key)
+    v = sphere_vector(kv, task.m)
+    u = sphere_vector(ku, task.d)
+
+    def rel_err(a, b):
+        a, b = jnp.asarray(a), jnp.asarray(b)
+        return float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(b)) + 1e-30))
+
+    err = max(
+        rel_err(ktask.matvec(state, v), task.matvec(state, v)),
+        rel_err(ktask.rmatvec(state, u), task.rmatvec(state, u)),
+    )
+    if err > tol:
+        raise AssertionError(
+            f"kernelized matvec diverges from jnp reference: rel err {err:.3e} "
+            f"> tol {tol:.1e} (task={type(task).__name__})"
+        )
+    return err
+
+
+# ---------------------------------------------------------------------------
+# Sampled-worker (straggler) schedule
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("num_epochs", "num_workers", "reweight"))
+def worker_schedule(
+    key: jax.Array,
+    num_epochs: int,
+    num_workers: int,
+    sample_prob: float,
+    *,
+    reweight: bool = True,
+) -> jax.Array:
+    """(num_epochs, num_workers) per-epoch worker weights.
+
+    Each worker participates independently with ``sample_prob`` (the paper's
+    sampled-worker/straggler-timeout model); if a draw kills every worker one
+    uniformly-chosen survivor is forced so the LMO stays well-defined. With
+    ``reweight`` the survivors are scaled by num_workers/num_alive, making
+    the psum'd loss/gap/line-search aggregates unbiased estimates of their
+    full-data values under equal shard sizes.
+    """
+
+    def one_epoch(k):
+        alive = jax.random.bernoulli(k, sample_prob, (num_workers,))
+        force = jax.random.randint(jax.random.fold_in(k, 1), (), 0, num_workers)
+        alive = jnp.where(jnp.any(alive), alive, alive.at[force].set(True))
+        w = alive.astype(jnp.float32)
+        if reweight:
+            w = w * (num_workers / jnp.sum(w))
+        return w
+
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        key, jnp.arange(num_epochs)
+    )
+    return jax.vmap(one_epoch)(keys)
+
+
+# ---------------------------------------------------------------------------
+# Sharded epoch construction
+# ---------------------------------------------------------------------------
+
+
+def make_sharded_epoch(
+    task,
+    cfg: DFWConfig,
+    mesh: Mesh,
+    num_power_iters: int,
+    state_example: PyTree,
+) -> Callable:
+    """shard_map-wrapped epoch: ``(state, it, t, key, mask) -> (state, it, aux)``.
+
+    The task state is row-sharded over ``cfg.data_axis``; iterate, scalars and
+    the PRNG key are replicated; ``mask`` is the (num_workers,) worker-weight
+    vector of which each worker consumes its own entry. This is exactly the
+    ``epoch_wrapper`` contract of ``frank_wolfe.fit`` plus the mask plumbing.
+    """
+    axis = cfg.data_axis
+    ep = frank_wolfe.make_epoch_step(
+        task, cfg.mu, num_power_iters, step_size=cfg.step_size, axis_name=axis
+    )
+
+    def step(state, it, t, key, mask):
+        return ep(state, it, t, key, worker_weight=mask[0])
+
+    state_spec = row_specs(state_example, axis)
+    it_spec = low_rank.FactoredIterate(u=P(), s=P(), v=P(), alpha=P(), count=P())
+    aux_spec = EpochAux(P(), P(), P(), P())
+    return shard_map_compat(
+        step,
+        mesh,
+        in_specs=(state_spec, it_spec, P(), P(), P(axis)),
+        out_specs=(state_spec, it_spec, aux_spec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+
+def _resolve_max_rank(cfg: DFWConfig) -> int:
+    """Factored-iterate capacity. One factor is appended per epoch and
+    low_rank.fw_update clamps out-of-range writes silently, so undersizing
+    would corrupt the returned iterate — reject it up front."""
+    if cfg.max_rank is None:
+        return cfg.num_epochs
+    if cfg.max_rank < cfg.num_epochs:
+        raise ValueError(
+            f"max_rank={cfg.max_rank} < num_epochs={cfg.num_epochs}: every "
+            "epoch appends one factor, so the iterate store would overflow"
+        )
+    return cfg.max_rank
+
+
+def fit(
+    task,
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    cfg: DFWConfig,
+    key: jax.Array,
+    mesh: Optional[Mesh] = None,
+    num_workers: Optional[int] = None,
+    callback: Optional[Callable[[int, EpochAux], None]] = None,
+) -> DFWFitResult:
+    """Run distributed DFW-Trace on data ``(x, y)`` sharded over workers.
+
+    Provide either a prebuilt 1-D ``mesh`` (axis ``cfg.data_axis``) or a
+    ``num_workers`` count (a mesh over the first N devices is built). The
+    sample axis of ``x``/``y`` must divide the worker count. The returned
+    history matches ``frank_wolfe.fit``'s, plus the per-epoch worker masks.
+    """
+    if mesh is None:
+        if num_workers is None:
+            raise ValueError("pass mesh= or num_workers=")
+        mesh = data_mesh(num_workers, cfg.data_axis)
+    elif num_workers is not None and mesh.shape[cfg.data_axis] != num_workers:
+        raise ValueError(
+            f"mesh has {mesh.shape[cfg.data_axis]} workers on "
+            f"{cfg.data_axis!r} but num_workers={num_workers}; pass one or "
+            "make them agree"
+        )
+    nw = mesh.shape[cfg.data_axis]
+    max_rank = _resolve_max_rank(cfg)
+
+    ktask = (
+        kernelize(task, use_pallas=cfg.use_pallas, interpret=cfg.interpret)
+        if cfg.kernelize
+        else task
+    )
+    if cfg.kernelize and cfg.verify_kernels:
+        # Probe on a small host-local slice before committing to the run.
+        probe_rows = min(x.shape[0], max(nw, 64))
+        probe = task.init_state(x[:probe_rows], y[:probe_rows])
+        verify_kernelized(task, ktask, probe, jax.random.fold_in(key, 0x5EED))
+
+    xs, ys = shard_rowwise(mesh, (x, y), cfg.data_axis)
+    state = ktask.init_state(xs, ys)
+    it = low_rank.init(max_rank, task.d, task.m)
+
+    masks = None
+    if cfg.sample_prob < 1.0:
+        masks = worker_schedule(
+            jax.random.fold_in(key, 0x1A5C),
+            cfg.num_epochs,
+            nw,
+            cfg.sample_prob,
+            reweight=cfg.reweight,
+        )
+    full = jnp.ones((nw,), jnp.float32)
+
+    sched = frank_wolfe.k_schedule(cfg.schedule)
+    compiled: Dict[int, Callable] = {}
+    history: Dict[str, list] = {
+        "loss": [], "gap": [], "sigma": [], "gamma": [], "k": []
+    }
+    for t in range(cfg.num_epochs):
+        k = sched(t)
+        if k not in compiled:
+            compiled[k] = jax.jit(
+                make_sharded_epoch(ktask, cfg, mesh, k, state_example=state)
+            )
+        mask_t = full if masks is None else masks[t]
+        state, it, aux = compiled[k](state, it, jnp.float32(t), key, mask_t)
+        if callback is not None:
+            callback(t, aux)
+        history["loss"].append(float(aux.loss))
+        history["gap"].append(float(aux.gap))
+        history["sigma"].append(float(aux.sigma))
+        history["gamma"].append(float(aux.gamma))
+        history["k"].append(k)
+    return DFWFitResult(iterate=it, state=state, history=history, masks=masks)
+
+
+def fit_serial(
+    task,
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    cfg: DFWConfig,
+    key: jax.Array,
+    callback: Optional[Callable[[int, EpochAux], None]] = None,
+) -> DFWFitResult:
+    """Single-device reference run with the *same* config (and the same
+    kernelized matvec path) as ``fit`` — the baseline every sharded run is
+    compared against in tests and benchmarks."""
+    ktask = (
+        kernelize(task, use_pallas=cfg.use_pallas, interpret=cfg.interpret)
+        if cfg.kernelize
+        else task
+    )
+    res = frank_wolfe.fit(
+        ktask,
+        ktask.init_state(jnp.asarray(x), jnp.asarray(y)),
+        mu=cfg.mu,
+        num_epochs=cfg.num_epochs,
+        key=key,
+        schedule=cfg.schedule,
+        step_size=cfg.step_size,
+        callback=callback,
+    )
+    return DFWFitResult(
+        iterate=res.iterate, state=res.state, history=res.history, masks=None
+    )

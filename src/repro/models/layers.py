@@ -12,6 +12,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map_compat
 from repro.kernels.flash_attention import ops as attn_ops
 from repro.kernels.flash_attention import ref as attn_ref
 from repro.launch.sharding import axes_size, data_axes, seq_axes, shard
@@ -197,12 +198,11 @@ def decode_attention_seq_sharded(
         return (acc_g / jnp.maximum(l_g, 1e-30)).astype(q_.dtype)
 
     sax = axes if len(axes) > 1 else axes[0]
-    return jax.shard_map(
+    return shard_map_compat(
         partial_attn,
-        mesh=mesh,
+        mesh,
         in_specs=(P(), P(None, None, sax, None), P(None, None, sax, None)),
         out_specs=P(),
-        check_vma=False,
     )(q, k, v)
 
 

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map_compat
 from repro.launch.sharding import active_mesh, data_axes, model_axes, pspec
 
 Params = Dict[str, jax.Array]
@@ -147,9 +148,9 @@ def moe_block(p: Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
             aux = jax.lax.pmean(aux, d_axes)
         return out, aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map_compat(
         body,
-        mesh=mesh,
+        mesh,
         in_specs=(
             P(batch_spec, None),  # tokens
             P(),  # router replicated
@@ -158,6 +159,5 @@ def moe_block(p: Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
             P(model_spec, batch_spec, None),  # wd FSDP'd on its f-dim
         ),
         out_specs=(P(batch_spec, None), P()),
-        check_vma=False,
     )(x.reshape(b * s, d), p["router"], p["wg"], p["wu"], p["wd"])
     return out.reshape(b, s, d).astype(x.dtype), aux

@@ -40,13 +40,13 @@ def test_sharded_dfw_trace_equals_serial():
                                  key=jax.random.PRNGKey(1), schedule="const:2",
                                  step_size="linesearch")
 
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ("data",))
         ss = tasks.MTLSState(x=P("data"), y=P("data"), r=P("data"))
         isp = low_rank.FactoredIterate(u=P(), s=P(), v=P(), alpha=P(), count=P())
         asp = frank_wolfe.EpochAux(P(), P(), P(), P())
-        wrap = lambda f: jax.shard_map(f, mesh=mesh, in_specs=(ss, isp, P(), P()),
-                                       out_specs=(ss, isp, asp), check_vma=False)
+        from repro.compat import shard_map_compat
+        wrap = lambda f: shard_map_compat(f, mesh, in_specs=(ss, isp, P(), P()),
+                                          out_specs=(ss, isp, asp))
         dist = frank_wolfe.fit(task, task.init_state(X, Y), mu=1.0, num_epochs=8,
                                key=jax.random.PRNGKey(1), schedule="const:2",
                                step_size="linesearch", axis_name="data",
@@ -72,7 +72,7 @@ def test_sharded_head_training_and_powersgd():
         W = jax.random.normal(key, (d, m))
         X = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
         y = jnp.argmax(X @ W, axis=1)
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ("data",))
         res = dfw_head.sharded_fit(mesh, X, y, m, mu=8.0, num_epochs=25)
         assert res.history["loss"][-1] < 0.7 * res.history["loss"][0]
         err = dfw_head.top_k_error(res.iterate, X, y, k=5)
@@ -88,10 +88,10 @@ def test_sharded_head_training_and_powersgd():
             synced, _ = compression.compress_and_sync({"w": g[0]}, st, min_size=16,
                                                       axis_name="data")
             return synced["w"][None]
-        out_dist = jax.shard_map(per_shard, mesh=mesh,
-                                 in_specs=(P("data", None, None),),
-                                 out_specs=P("data", None, None),
-                                 check_vma=False)(g_shards)
+        from repro.compat import shard_map_compat
+        out_dist = shard_map_compat(per_shard, mesh,
+                                    in_specs=(P("data", None, None),),
+                                    out_specs=P("data", None, None))(g_shards)
         g_mean = jnp.mean(g_shards, axis=0)
         out_ser, _ = compression.compress_and_sync({"w": g_mean}, st, min_size=16)
         np.testing.assert_allclose(np.asarray(out_dist[0]), np.asarray(out_ser["w"]),
@@ -108,8 +108,7 @@ def test_seq_sharded_flash_decode():
         from repro.models import layers
         from repro.kernels.flash_attention import ref
 
-        mesh = jax.make_mesh((8, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = jax.make_mesh((8, 1), ("data", "model"))
         b, hq, hkv, S, dh = 1, 4, 2, 128, 16
         key = jax.random.PRNGKey(0)
         q = jax.random.normal(key, (b, hq, 1, dh))
@@ -131,13 +130,14 @@ def test_straggler_dropout_still_converges():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.core import tasks, frank_wolfe, low_rank
+        from repro.compat import shard_map_compat
 
         n, d, m = 1600, 30, 20
         key = jax.random.PRNGKey(0)
         W = jax.random.normal(key, (d, m)); W = W / jnp.linalg.norm(W, ord="nuc")
         X = jax.random.normal(jax.random.fold_in(key, 1), (n, d)); Y = X @ W
         task = tasks.MultiTaskLeastSquares(d=d, m=m)
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ("data",))
         ss = tasks.MTLSState(x=P("data"), y=P("data"), r=P("data"))
         isp = low_rank.FactoredIterate(u=P(), s=P(), v=P(), alpha=P(), count=P())
         asp = frank_wolfe.EpochAux(P(), P(), P(), P())
@@ -152,9 +152,9 @@ def test_straggler_dropout_still_converges():
                 ep = frank_wolfe.make_epoch_step(task, 1.0, 2,
                     step_size="linesearch", axis_name="data")
                 return ep(st, itr, tt, kk, worker_weight=mask[0])
-            wrap = jax.shard_map(step, mesh=mesh,
+            wrap = shard_map_compat(step, mesh,
                 in_specs=(ss, isp, P(), P(), P("data")),
-                out_specs=(ss, isp, asp), check_vma=False)
+                out_specs=(ss, isp, asp))
             mask = jnp.ones((8,)).at[drop].set(0.0)
             state, it, aux = wrap(state, it, jnp.float32(t), jax.random.PRNGKey(1), mask)
             losses.append(float(aux.loss))
@@ -170,9 +170,8 @@ def test_elastic_checkpoint_remesh():
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.checkpoint import CheckpointStore
 
-        mesh8 = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
-        mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh8 = jax.make_mesh((8,), ("data",))
+        mesh2 = jax.make_mesh((2, 4), ("data", "model"))
         x = jnp.arange(64.0).reshape(8, 8)
         xs = jax.device_put(x, NamedSharding(mesh8, P("data", None)))
         with tempfile.TemporaryDirectory() as dd:
@@ -203,8 +202,7 @@ def test_moe_ep_shard_map_matches_local():
 
         out_local, aux_local = moe.moe_block(p, x, cfg)
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
         with use_mesh(mesh):
             out_ep, aux_ep = jax.jit(lambda p, x: moe.moe_block(p, x, cfg))(p, x)
         np.testing.assert_allclose(np.asarray(out_local), np.asarray(out_ep),

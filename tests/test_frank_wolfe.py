@@ -11,6 +11,48 @@ from repro.core import (
     tasks,
     trace_norm,
 )
+from repro.core.frank_wolfe import k_schedule
+
+
+# ---------------------------------------------------------------------------
+# K(t) schedules (paper Thm 2 + §5 experimental settings)
+# ---------------------------------------------------------------------------
+
+
+def test_k_schedule_const():
+    for k in (1, 2, 8):
+        sched = k_schedule(f"const:{k}")
+        assert [sched(t) for t in (0, 1, 10, 100)] == [k] * 4
+
+
+def test_k_schedule_log_variants():
+    log = k_schedule("log")
+    half = k_schedule("log_half")
+    assert log(0) == 1 and half(0) == 1
+    vals_log = [log(t) for t in range(200)]
+    vals_half = [half(t) for t in range(200)]
+    # nondecreasing, integer, and the half schedule never exceeds the full one
+    assert all(b >= a for a, b in zip(vals_log, vals_log[1:]))
+    assert all(b >= a for a, b in zip(vals_half, vals_half[1:]))
+    assert all(h <= l for h, l in zip(vals_half, vals_log))
+    assert all(isinstance(v, int) and v >= 1 for v in vals_log + vals_half)
+    assert vals_log[-1] > vals_log[0]  # actually grows
+
+
+def test_k_schedule_linear():
+    sched = k_schedule("linear:0.5")
+    vals = [sched(t) for t in range(50)]
+    assert all(b >= a for a, b in zip(vals, vals[1:]))
+    assert sched(0) == 1 + int(np.ceil(0.5 * 2))
+    # slope ~ c: over 40 steps the schedule grows by ~20
+    assert 18 <= vals[40] - vals[0] <= 22
+
+
+def test_k_schedule_unknown_name_raises():
+    with pytest.raises(ValueError, match="unknown K schedule"):
+        k_schedule("fibonacci")
+    with pytest.raises(ValueError):
+        k_schedule("const")  # malformed: missing :K suffix
 
 
 def _mtls_problem(key, n=1500, d=40, m=30, rank=5):

@@ -12,7 +12,10 @@ def test_converges_to_top_pair(d, m):
     key = jax.random.PRNGKey(0)
     a = jax.random.normal(key, (d, m))
     u, s, vt = np.linalg.svd(np.asarray(a), full_matrices=False)
-    res = top_singular_pair(a, jax.random.PRNGKey(1), num_iters=100)
+    # iteration budget must cover the worst spectral gap across the
+    # parametrized shapes: (17, 51) has s2/s1 ~ 0.983, so ~100 iterations
+    # only contract the off-axis mass to ~0.18 — 300 converge fully
+    res = top_singular_pair(a, jax.random.PRNGKey(1), num_iters=300)
     assert res.sigma == pytest.approx(s[0], rel=1e-4)
     # direction match up to sign (sign fixed by two-sided iteration: u^T A v >= 0)
     assert abs(float(jnp.dot(res.u, u[:, 0]))) > 0.999
