@@ -2,11 +2,16 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke lint
+.PHONY: test test-fast bench-smoke lint
 
 # Tier-1 verify (see ROADMAP.md): full pytest suite, stop at first failure.
 test:
 	$(PYTHON) -m pytest -x -q
+
+# Pre-merge gate: skips @pytest.mark.slow (multi-minute convergence sweeps
+# and subprocess-heavy multi-device tests). CI runs this lane.
+test-fast:
+	$(PYTHON) -m pytest -x -q -m "not slow"
 
 # Fast pass over the paper-figure benchmark suites (small problem sizes).
 bench-smoke:

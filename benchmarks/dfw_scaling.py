@@ -63,7 +63,7 @@ else:
                   num_workers=NDEV, callback=cb)
 ts.sort()
 print(json.dumps({"us_per_epoch": ts[len(ts) // 2] * 1e6,
-                  "loss_final": res.history["loss"][-1]}))
+                  "loss_final": res.final_loss}))
 """
 
 
@@ -130,7 +130,7 @@ def _schedule_sweep(n, d, m, epochs):
         comm_kb = k_total * 2 * (d + m) * 4 / 1e3  # 2 psums of f32 vectors
         emit(f"dfw_scaling.sched[{sched}]", ts[len(ts) // 2] * 1e6,
              f"gap_final={res.history['gap'][-1]:.4f};"
-             f"loss_final={res.history['loss'][-1]:.5f};"
+             f"loss_final={res.final_loss:.5f};"
              f"k_total={k_total};comm_kb_per_worker={comm_kb:.1f}")
 
 

@@ -46,5 +46,5 @@ def run(epochs: int = 30, m: int = 100, tokens: int = 4096):
             us = (time.perf_counter() - t0) / epochs * 1e6
             err5 = dfw_head.top_k_error(res.iterate, x, y, k=5)
             emit(f"fig3.mu{int(mu)}.{name}", us,
-                 f"loss={res.history['loss'][-1]:.1f};top5err={err5:.4f};"
+                 f"loss={res.final_loss:.1f};top5err={err5:.4f};"
                  f"rank<={int(res.iterate.count)}")

@@ -28,7 +28,7 @@ def run(epochs: int = 25, n: int = 8000, d: int = 128, m: int = 64):
             us = (time.perf_counter() - t0) / epochs * 1e6
             err = float(task.errors(res.state, top_k=5)) / n
             emit(f"fig2.mu{int(mu)}.{name}", us,
-                 f"loss={res.history['loss'][-1]:.1f};top5err={err:.4f}")
+                 f"loss={res.final_loss:.1f};top5err={err:.4f}")
 
         # NAIVE-DFW reference at this mu
         st = task.init_state(x, y)

@@ -57,4 +57,4 @@ def run(epochs: int = 25, n: int = 20000, d: int = 200, m: int = 200):
                   key=jax.random.PRNGKey(1), schedule=sched, step_size="linesearch")
         us = (time.perf_counter() - t0) / epochs * 1e6
         emit(f"fig1.{name}", us,
-             f"loss={res.history['loss'][-1]:.4f};err={err(res.iterate):.4f}")
+             f"loss={res.final_loss:.4f};err={err(res.iterate):.4f}")

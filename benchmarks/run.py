@@ -18,6 +18,7 @@ def main() -> None:
         imagenet_head,
         kernel_bench,
         logistic_convergence,
+        matrix_completion,
         mtls_convergence,
         power_accuracy,
         roofline,
@@ -35,6 +36,9 @@ def main() -> None:
         "fig4_scaling": scaling.run,
         "fig4_dfw_scaling": (lambda: dfw_scaling.run(n=2048, d=64, m=32, epochs=5))
         if args.fast else dfw_scaling.run,
+        "fig5_matrix_completion": (
+            lambda: matrix_completion.run(d=128, m=96, obs=0.3, epochs=8))
+        if args.fast else matrix_completion.run,
         "thm2_power_accuracy": power_accuracy.run,
         "kernels": kernel_bench.run,
         "roofline": roofline.run,

@@ -1,0 +1,90 @@
+"""Distributed matrix completion with DFW-Trace on 8 simulated workers.
+
+The paper's third task (§2.3): recover a low-rank matrix from a sparse set of
+observed entries, F(W) = 1/2 sum_{(i,j) in Omega} (W_ij - M_ij)^2 on the
+trace-norm ball. The gradient lives only on Omega, so each worker stores its
+entry shard in COO layout (O(|Omega_j|) sufficient information, App. B) and
+the power-method matvecs are segment gather/scatter chains routed through the
+``kernels/mc_matvec`` Pallas ops. Entries are sharded by row blocks and padded
+to equal shard sizes with zero-weight no-op entries so shapes stay static
+under shard_map.
+
+Run:  PYTHONPATH=src python examples/matrix_completion.py
+(sets XLA_FLAGS itself — run as a standalone script)
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import low_rank, tasks  # noqa: E402
+from repro.launch import dfw  # noqa: E402
+
+# --- synthetic rank-r ground truth, sparse observations --------------------
+d, m, rank, obs_frac = 256, 192, 6, 0.25
+key = jax.random.PRNGKey(0)
+ku, kv, ko, ks = jax.random.split(key, 4)
+u = jnp.linalg.qr(jax.random.normal(ku, (d, rank)))[0]
+v = jnp.linalg.qr(jax.random.normal(kv, (m, rank)))[0]
+sv = jnp.linspace(1.0, 0.2, rank)
+w_true = (u * (sv / jnp.sum(sv))) @ v.T  # ||W*||_* = 1, rank 6
+
+mask = jax.random.bernoulli(ko, obs_frac, (d, m))
+rows, cols = jnp.nonzero(mask)
+vals = w_true[rows, cols]
+
+# 90/10 train / held-out split of the observed entries
+holdout = jax.random.bernoulli(ks, 0.1, rows.shape)
+tr, ho = jnp.nonzero(~holdout)[0], jnp.nonzero(holdout)[0]
+print(f"observed {rows.size} of {d * m} entries "
+      f"({100 * rows.size / (d * m):.0f}%), {ho.size} held out")
+
+task = tasks.MatrixCompletion(d=d, m=m)
+cfg = dfw.DFWConfig(mu=1.0, num_epochs=40, schedule="log",
+                    step_size="linesearch")
+
+# --- serial reference vs 8-way row-block-sharded run -----------------------
+idx, yw = tasks.pack_observations(rows[tr], cols[tr], vals[tr])
+serial = dfw.fit_serial(task, idx, yw, cfg=cfg, key=jax.random.PRNGKey(1))
+
+idx8, yw8 = dfw.shard_observations(rows[tr], cols[tr], vals[tr], 8, d, m=m)
+shard = dfw.fit(task, idx8, yw8, cfg=cfg, key=jax.random.PRNGKey(1),
+                num_workers=8)
+print(f"padding overhead: {idx8.shape[0] / tr.size - 1:.1%} "
+      f"({idx8.shape[0] - tr.size} zero-weight entries)")
+
+
+def holdout_rmse(it):
+    pred = low_rank.gather_entries(it, rows[ho], cols[ho])
+    return float(jnp.sqrt(jnp.mean((pred - vals[ho]) ** 2)))
+
+
+print(f"{'epoch':>5} {'K(t)':>4} {'serial loss':>12} {'sharded loss':>12} "
+      f"{'gap':>10}")
+for t in range(0, cfg.num_epochs, 5):
+    print(f"{t:>5} {shard.history['k'][t]:>4} "
+          f"{serial.history['loss'][t]:>12.6f} "
+          f"{shard.history['loss'][t]:>12.6f} "
+          f"{shard.history['gap'][t]:>10.6f}")
+print(f"final train loss (returned iterate): serial {serial.final_loss:.6f} "
+      f"sharded {shard.final_loss:.6f}")
+
+drift = max(abs(a - b) / (abs(a) + 1e-12)
+            for a, b in zip(serial.history["loss"], shard.history["loss"]))
+print(f"max relative serial-vs-sharded loss drift: {drift:.2e}")
+assert drift < 1e-4
+
+rmse = holdout_rmse(shard.iterate)
+base = float(jnp.sqrt(jnp.mean(vals[ho] ** 2)))  # predict-zero baseline
+print(f"held-out RMSE {rmse:.5f} vs predict-zero {base:.5f} "
+      f"(rank <= {int(shard.iterate.count)})")
+assert rmse < 0.35 * base
+assert shard.final_loss < 0.05 * shard.history["loss"][0]
+
+# --- communication accounting ----------------------------------------------
+k_total = sum(shard.history["k"])
+print(f"total power iterations: {k_total}; per-worker wire traffic "
+      f"{k_total * 2 * (d + m) * 4 / 1e3:.1f} KB vs naive gradient sync "
+      f"{cfg.num_epochs * d * m * 4 / 1e3:.1f} KB")

@@ -7,6 +7,7 @@ Public surface:
     baselines.make_sva_epoch_step       — Singular Vector Averaging (§3.1)
     tasks.MultiTaskLeastSquares[Dense]  — paper §2.3 / App. B
     tasks.MultinomialLogistic           — paper §2.3 / App. B
+    tasks.MatrixCompletion              — paper §2.3 / App. B (sparse Omega)
     low_rank.FactoredIterate            — O(t(d+m)) iterate store (§2.2)
     dfw_head.DFWHeadTrainer             — trace-norm head training on LM zoo
 """
@@ -14,7 +15,13 @@ from . import baselines, dfw_head, frank_wolfe, low_rank, power_method, tasks, t
 from .frank_wolfe import EpochAux, FitResult, fit, k_schedule, make_epoch_step
 from .low_rank import FactoredIterate
 from .power_method import PowerResult, power_iterations, sphere_vector, top_singular_pair
-from .tasks import MultinomialLogistic, MultiTaskLeastSquares, MultiTaskLeastSquaresDense
+from .tasks import (
+    MatrixCompletion,
+    MultinomialLogistic,
+    MultiTaskLeastSquares,
+    MultiTaskLeastSquaresDense,
+    pack_observations,
+)
 from .trace_norm import duality_gap, lmo_trace_ball, trace_norm
 
 __all__ = [
@@ -34,9 +41,11 @@ __all__ = [
     "power_iterations",
     "sphere_vector",
     "top_singular_pair",
+    "MatrixCompletion",
     "MultinomialLogistic",
     "MultiTaskLeastSquares",
     "MultiTaskLeastSquaresDense",
+    "pack_observations",
     "duality_gap",
     "lmo_trace_ball",
     "trace_norm",

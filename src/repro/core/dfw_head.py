@@ -48,7 +48,8 @@ def extract_features(
 @dataclasses.dataclass
 class HeadFitResult:
     iterate: low_rank.FactoredIterate  # factored head, rank <= epochs
-    history: Dict[str, list]
+    history: Dict[str, list]  # pre-update per-epoch trajectory
+    final_loss: float = float("nan")  # loss of the returned head
 
     def head_matrix(self) -> jax.Array:
         return low_rank.materialize(self.iterate)
@@ -72,7 +73,8 @@ def train_head(
         key=key if key is not None else jax.random.PRNGKey(0),
         schedule=schedule, step_size="default",
     )
-    return HeadFitResult(iterate=res.iterate, history=res.history)
+    return HeadFitResult(iterate=res.iterate, history=res.history,
+                         final_loss=res.final_loss)
 
 
 def sharded_fit(
@@ -114,7 +116,8 @@ def sharded_fit(
         axis_name=data_axes if len(data_axes) > 1 else data_axes[0],
         epoch_wrapper=wrapper,
     )
-    return HeadFitResult(iterate=res.iterate, history=res.history)
+    return HeadFitResult(iterate=res.iterate, history=res.history,
+                         final_loss=res.final_loss)
 
 
 def top_k_error(

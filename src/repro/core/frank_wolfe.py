@@ -45,9 +45,19 @@ def k_schedule(name: str) -> Callable[[int], int]:
     - ``log``       DFW-TRACE-log, K(t) = floor(1 + ln(t+1))
     - ``log_half``  K(t) = floor(1 + 0.5 ln(t+1))  (paper's logistic setting)
     - ``linear:c``  Thm 2 part 1 regime, K(t) = 1 + ceil(c (t+2))
+
+    Every schedule must yield K(t) >= 1: zero power iterations returns the
+    u=0, sigma=0 placeholder from ``power_iterations`` and silently corrupts
+    both the FW update and the duality gap, so K=0 configurations are
+    rejected here rather than failing downstream.
     """
     if name.startswith("const:"):
         k = int(name.split(":")[1])
+        if k < 1:
+            raise ValueError(
+                f"K schedule {name!r}: K must be >= 1 (K=0 yields a zero LMO "
+                "direction and a meaningless duality gap)"
+            )
         return lambda t: k
     if name == "log":
         return lambda t: int(1 + math.log(t + 1))
@@ -55,6 +65,10 @@ def k_schedule(name: str) -> Callable[[int], int]:
         return lambda t: max(1, int(1 + 0.5 * math.log(t + 1)))
     if name.startswith("linear:"):
         c = float(name.split(":")[1])
+        if c <= 0:
+            raise ValueError(
+                f"K schedule {name!r}: slope c must be > 0 so K(t) >= 1"
+            )
         return lambda t: 1 + int(math.ceil(c * (t + 2)))
     raise ValueError(f"unknown K schedule: {name!r}")
 
@@ -86,6 +100,11 @@ def make_epoch_step(
         raise ValueError(step_size)
     if step_size == "linesearch" and not hasattr(task, "linesearch_terms"):
         raise ValueError(f"{type(task).__name__} has no closed-form line search")
+    if num_power_iters < 1:
+        raise ValueError(
+            f"num_power_iters={num_power_iters}: at least one power iteration "
+            "is required (K=0 would feed a zero singular direction to the LMO)"
+        )
 
     def epoch(
         state: PyTree,
@@ -134,9 +153,14 @@ def make_epoch_step(
 
 @dataclasses.dataclass
 class FitResult:
+    """``history`` entries are *pre-update* measurements (see ``fit``);
+    ``final_loss`` is F at the *returned* iterate — use it when reporting
+    the quality of the fitted model."""
+
     iterate: low_rank.FactoredIterate
     state: PyTree
     history: Dict[str, list]
+    final_loss: float = float("nan")
 
 
 def fit(
@@ -153,6 +177,15 @@ def fit(
     callback: Optional[Callable[[int, EpochAux], None]] = None,
 ) -> FitResult:
     """Run DFW-TRACE for ``num_epochs``.
+
+    **History contract.** ``history[key][t]`` records epoch t's measurements
+    at W^t *before* that epoch's update — the loss/gap the power method and
+    step size were computed against (matching the paper's per-epoch
+    trajectories). The loss of the *returned* iterate W^{num_epochs} never
+    appears in ``history``; it is exposed as ``FitResult.final_loss``
+    (the psum'd ``task.local_loss`` of the returned state). Benchmarks that
+    report "final loss" must use ``final_loss``, not ``history["loss"][-1]``
+    (which is one epoch stale).
 
     ``epoch_wrapper`` contract: a function ``wrap(step) -> step'`` applied to
     each freshly built epoch *before* ``jax.jit`` (one wrap per distinct K(t)
@@ -188,4 +221,7 @@ def fit(
         history["sigma"].append(float(aux.sigma))
         history["gamma"].append(float(aux.gamma))
         history["k"].append(k)
-    return FitResult(iterate=it, state=state, history=history)
+    # Loss at the *returned* iterate (cheap: one O(n_j) reduction outside the
+    # epoch; on sharded state the plain sum is already the global loss).
+    final_loss = float(jax.jit(task.local_loss)(state))
+    return FitResult(iterate=it, state=state, history=history, final_loss=final_loss)

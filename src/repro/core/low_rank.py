@@ -41,16 +41,21 @@ def fw_update(
 
     Instead of rescaling all live factors by (1-gamma) — an O(t) sweep — we
     fold it into ``alpha`` and store the new factor pre-divided by the new
-    alpha. gamma=1 (epoch 0) is handled by flooring alpha away from zero;
-    the stored s then exactly cancels the floor.
+    alpha. gamma=1 annihilates the whole iterate (W <- S): alpha underflows
+    to zero, so we floor it back to 1 *and zero the live factors' s entries*
+    — flooring alone would resurrect the pre-existing factors at full scale
+    (the line search clips gamma into [0, 1], so gamma == 1 is reachable at
+    any t, not just epoch 0).
     """
     new_alpha = it.alpha * (1.0 - gamma)
-    safe_alpha = jnp.where(jnp.abs(new_alpha) < 1e-30, 1.0, new_alpha)
+    dead = jnp.abs(new_alpha) < 1e-30
+    safe_alpha = jnp.where(dead, 1.0, new_alpha)
+    s_live = jnp.where(dead, jnp.zeros_like(it.s), it.s)
     s_new = -gamma * mu / safe_alpha
     k = it.count
     return FactoredIterate(
         u=jax.lax.dynamic_update_slice(it.u, u[None, :].astype(it.u.dtype), (k, 0)),
-        s=jax.lax.dynamic_update_slice(it.s, s_new[None].astype(it.s.dtype), (k,)),
+        s=jax.lax.dynamic_update_slice(s_live, s_new[None].astype(it.s.dtype), (k,)),
         v=jax.lax.dynamic_update_slice(it.v, v[None, :].astype(it.v.dtype), (k, 0)),
         alpha=safe_alpha,
         count=k + 1,
@@ -70,6 +75,14 @@ def matvec(it: FactoredIterate, x: jax.Array) -> jax.Array:
 def rmatvec(it: FactoredIterate, x: jax.Array) -> jax.Array:
     """W^T @ x in O(t(d+m))."""
     return it.alpha * (it.v.T @ (it.s * (it.u @ x)))
+
+
+def gather_entries(it: FactoredIterate, rows: jax.Array, cols: jax.Array) -> jax.Array:
+    """W[rows, cols] for index vectors (p,) in O(t p) — held-out evaluation
+    for matrix completion without materializing W."""
+    return it.alpha * jnp.einsum(
+        "k,kp,kp->p", it.s, it.u[:, rows], it.v[:, cols]
+    )
 
 
 def right_multiply(it: FactoredIterate, x: jax.Array) -> jax.Array:

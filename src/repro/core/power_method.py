@@ -68,6 +68,11 @@ def power_iterations(
     The two-sided iteration guarantees ``u^T A v = ||A^T u|| >= 0``, so the
     trace-norm LMO solution is always ``S* = -mu u v^T`` with no sign fix.
     """
+    if num_iters < 1:
+        raise ValueError(
+            f"num_iters={num_iters}: power_iterations needs >= 1 iteration "
+            "(0 returns u=0, sigma=0 and silently corrupts the caller)"
+        )
     w = 1.0 if worker_weight is None else worker_weight
 
     def body(_, carry):

@@ -17,7 +17,7 @@ Interface (duck-typed; see ``frank_wolfe.DFWTask``):
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -176,3 +176,115 @@ class MultinomialLogistic:
         _, idx = jax.lax.top_k(s.z, top_k)
         hit = jnp.any(idx == s.y[:, None], axis=-1)
         return jnp.sum(~hit)
+
+
+# ---------------------------------------------------------------------------
+# Matrix completion:  F(W) = 1/2 sum_{(i,j) in Omega} (W_ij - M_ij)^2
+# ---------------------------------------------------------------------------
+
+
+class MCState(NamedTuple):
+    """Sparse sufficient information (paper App. B, completion column).
+
+    A worker stores only its shard of observed entries in COO layout plus the
+    residual *on those entries* — never the d x m matrix. Every FW quantity is
+    a segment-gather/scatter chain over the entry axis, so per-worker memory
+    and per-epoch compute are O(|Omega_j| + d + m).
+
+    ``weight`` is a {0, 1} padding mask: the distributed driver pads shards to
+    equal entry counts (static shapes under shard_map) with weight-0 dummy
+    entries. ``resid`` is stored *pre-masked* (``weight * (W_ij - M_ij)``), so
+    padding entries contribute exactly zero to every reduction and matvec.
+    """
+
+    rows: jax.Array  # (p_j,) int32 global row index of each observed entry
+    cols: jax.Array  # (p_j,) int32 global column index
+    vals: jax.Array  # (p_j,) observed values M_ij (arbitrary on padding)
+    resid: jax.Array  # (p_j,) weight * (W_ij - M_ij)
+    weight: jax.Array  # (p_j,) {0,1} mask; 0 marks padding entries
+
+
+def pack_observations(
+    rows, cols, vals, weight=None
+) -> Tuple[jax.Array, jax.Array]:
+    """Pack COO observations into the generic ``(x, y)`` driver arrays.
+
+    Returns ``idx`` (p, 2) int32 = [row, col] and ``yw`` (p, 2) f32 =
+    [value, weight] — the shapes ``MatrixCompletion.init_state`` consumes and
+    ``launch/dfw.shard_rowwise`` shards along the entry axis.
+    """
+    rows = jnp.asarray(rows, jnp.int32)
+    cols = jnp.asarray(cols, jnp.int32)
+    vals = jnp.asarray(vals, jnp.float32)
+    w = jnp.ones_like(vals) if weight is None else jnp.asarray(weight, jnp.float32)
+    return jnp.stack([rows, cols], axis=1), jnp.stack([vals, w], axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixCompletion:
+    """Paper §2.3 task 3. The gradient is supported on observed entries only:
+    ``grad = P_Omega(W - M)``, a sparse matrix with the residuals as values —
+    matvec/rmatvec are scatter-reductions over the entry shard (App. B)."""
+
+    d: int
+    m: int
+
+    def init_state(self, idx: jax.Array, yw: jax.Array) -> MCState:
+        # W^0 = 0  =>  resid = weight * (0 - M)
+        rows = idx[:, 0].astype(jnp.int32)
+        cols = idx[:, 1].astype(jnp.int32)
+        vals = yw[:, 0]
+        weight = yw[:, 1]
+        return MCState(rows=rows, cols=cols, vals=vals,
+                       resid=-weight * vals, weight=weight)
+
+    # grad @ v: scatter resid_e * v[col_e] into rows. Never materialized.
+    def matvec(self, s: MCState, v: jax.Array) -> jax.Array:
+        return jax.ops.segment_sum(
+            s.resid * jnp.take(v, s.cols), s.rows, num_segments=self.d
+        )
+
+    def rmatvec(self, s: MCState, u: jax.Array) -> jax.Array:
+        return jax.ops.segment_sum(
+            s.resid * jnp.take(u, s.rows), s.cols, num_segments=self.m
+        )
+
+    def update(self, s: MCState, u, v, gamma, mu) -> MCState:
+        # W' = (1-g)W - g mu u v^T on the observed entries:
+        # resid' = (1-g) resid - g w M - g mu w u[rows] v[cols]
+        uv = s.weight * jnp.take(u, s.rows) * jnp.take(v, s.cols)
+        resid = (1.0 - gamma) * s.resid - gamma * s.weight * s.vals - (gamma * mu) * uv
+        return s._replace(resid=resid)
+
+    def local_loss(self, s: MCState) -> jax.Array:
+        # weight^2 == weight for a {0,1} mask, so resid^2 is already masked
+        return 0.5 * jnp.sum(s.resid * s.resid)
+
+    def inner_w_grad(self, s: MCState) -> jax.Array:
+        # <W, grad> over observed entries; W_ij = resid + M_ij there, and
+        # padding terms vanish with resid == 0.
+        return jnp.sum((s.resid + s.weight * s.vals) * s.resid)
+
+    def local_grad(self, s: MCState) -> jax.Array:
+        """Dense d x m gradient P_Omega(W - M) — baselines/tests only."""
+        return jnp.zeros((self.d, self.m), s.resid.dtype).at[s.rows, s.cols].add(
+            s.resid
+        )
+
+    def linesearch_terms(self, s: MCState, u, v, mu):
+        """Local (numerator, denominator) of the exact step for the quadratic
+        objective: gamma* = <-grad, D> / ||P_Omega(D)||^2 with D = S - W,
+        restricted to the entry shard (all O(p_j))."""
+        # w * D_ij = -mu w u_i v_j - w W_ij, with w W_ij = resid + w M_ij
+        dw = -(mu) * s.weight * jnp.take(u, s.rows) * jnp.take(v, s.cols) - (
+            s.resid + s.weight * s.vals
+        )
+        numer = -jnp.sum(s.resid * dw)
+        denom = jnp.sum(dw * dw)
+        return numer, denom
+
+    def rmse(self, s: MCState) -> jax.Array:
+        """Local RMSE over this shard's (non-padding) observed entries."""
+        return jnp.sqrt(
+            jnp.sum(s.resid * s.resid) / jnp.maximum(jnp.sum(s.weight), 1.0)
+        )

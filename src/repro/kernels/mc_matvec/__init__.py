@@ -1,0 +1,5 @@
+"""Observed-entry (COO) matvec kernels for the matrix-completion gradient."""
+from . import kernel, ops, ref
+from .ops import matvec, rmatvec
+
+__all__ = ["kernel", "ops", "ref", "matvec", "rmatvec"]

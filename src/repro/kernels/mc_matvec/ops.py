@@ -1,0 +1,85 @@
+"""Public jit'd wrappers: entry padding, dispatch (Pallas on TPU / ref elsewhere).
+
+Same contract as ``power_matvec/ops.py``: callers get 1-D vectors in/out and
+never see the (p, 1)/(dim, 1) carriage or the entry-block padding. Padding
+entries carry vals=0 (exact no-ops) and point at coordinate 0, so ``out_dim``
+never needs to grow.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _use_pallas(force: bool | None) -> bool:
+    if force is not None:
+        return force
+    return jax.default_backend() == "tpu"
+
+
+def _pad_entries(seg, gat, vals, block_e):
+    p = seg.shape[0]
+    pad = (-p) % block_e
+    if pad:
+        seg = jnp.pad(seg, (0, pad))
+        gat = jnp.pad(gat, (0, pad))
+        vals = jnp.pad(vals, (0, pad))  # zeros: exact no-op entries
+    return (
+        seg.reshape(-1, 1).astype(jnp.int32),
+        gat.reshape(-1, 1).astype(jnp.int32),
+        vals.reshape(-1, 1),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_rows", "block_e", "use_pallas", "interpret")
+)
+def matvec(
+    rows: jax.Array,
+    cols: jax.Array,
+    vals: jax.Array,
+    v: jax.Array,
+    num_rows: int,
+    *,
+    block_e: int = 512,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """G @ v -> (num_rows,) for the COO gradient G with values ``vals``."""
+    if not _use_pallas(use_pallas) and not interpret:
+        return ref.matvec(rows, cols, vals, v, num_rows)
+    seg, gat, valsp = _pad_entries(rows, cols, vals, block_e)
+    out = kernel.coo_matvec(
+        seg, gat, valsp, v.reshape(-1, 1),
+        out_dim=num_rows, block_e=block_e, interpret=interpret,
+    )
+    return out[:, 0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_cols", "block_e", "use_pallas", "interpret")
+)
+def rmatvec(
+    rows: jax.Array,
+    cols: jax.Array,
+    vals: jax.Array,
+    u: jax.Array,
+    num_cols: int,
+    *,
+    block_e: int = 512,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """G^T @ u -> (num_cols,): the same kernel with seg/gather roles swapped."""
+    if not _use_pallas(use_pallas) and not interpret:
+        return ref.rmatvec(rows, cols, vals, u, num_cols)
+    seg, gat, valsp = _pad_entries(cols, rows, vals, block_e)
+    out = kernel.coo_matvec(
+        seg, gat, valsp, u.reshape(-1, 1),
+        out_dim=num_cols, block_e=block_e, interpret=interpret,
+    )
+    return out[:, 0]

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the observed-entry (COO) matvec kernels.
+
+The matrix-completion gradient is supported on the observed entries only:
+``G = P_Omega(W - M)`` with values ``vals_e`` at coordinates
+``(rows_e, cols_e)``. Its matvecs are segment reductions over the entry axis;
+``jax.ops.segment_sum`` is the reference the Pallas kernels are verified
+against (same role as ``power_matvec/ref.py`` for the dense tasks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matvec(
+    rows: jax.Array, cols: jax.Array, vals: jax.Array, v: jax.Array, num_rows: int
+) -> jax.Array:
+    """G @ v -> (num_rows,): scatter vals_e * v[cols_e] into rows."""
+    contrib = vals.astype(jnp.float32) * jnp.take(v, cols).astype(jnp.float32)
+    return jax.ops.segment_sum(contrib, rows, num_segments=num_rows)
+
+
+def rmatvec(
+    rows: jax.Array, cols: jax.Array, vals: jax.Array, u: jax.Array, num_cols: int
+) -> jax.Array:
+    """G^T @ u -> (num_cols,): scatter vals_e * u[rows_e] into cols."""
+    contrib = vals.astype(jnp.float32) * jnp.take(u, rows).astype(jnp.float32)
+    return jax.ops.segment_sum(contrib, cols, num_segments=num_cols)

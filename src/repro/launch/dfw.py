@@ -13,10 +13,13 @@ the *machine* around it:
   over workers feeds the ``worker_weight`` mask of the core epoch, with
   optional inverse-participation reweighting so aggregates stay unbiased,
 - kernelized matvecs: the power-iteration hot path is routed through the
-  ``kernels/power_matvec`` Pallas ops (one HBM pass per call on TPU, jnp
-  reference fallback elsewhere), with an up-front correctness check against
-  the task's pure-jnp operator chain (the same oracle as
-  ``kernels/power_matvec/ref.py``).
+  ``kernels/power_matvec`` Pallas ops (dense-state tasks) or
+  ``kernels/mc_matvec`` (observed-entry completion gradient) — one HBM pass
+  per call on TPU, jnp reference fallback elsewhere — with an up-front
+  correctness check against the task's pure-jnp operator chain,
+- matrix-completion data layout: ``shard_observations`` partitions the
+  observed entries into row-block worker shards padded to equal sizes with
+  zero-weight no-op entries (static shapes under shard_map).
 
 The serial driver (``frank_wolfe.fit``) and this sharded driver execute the
 same jitted epoch function; they differ only in the ``epoch_wrapper`` layer,
@@ -43,6 +46,7 @@ from ..compat import shard_map_compat
 from ..core import frank_wolfe, low_rank, tasks
 from ..core.frank_wolfe import EpochAux
 from ..core.power_method import sphere_vector
+from ..kernels.mc_matvec import ops as mc_ops
 from ..kernels.power_matvec import ops as pm_ops
 from . import mesh as mesh_lib
 
@@ -83,8 +87,9 @@ class DFWConfig:
 class DFWFitResult:
     iterate: low_rank.FactoredIterate
     state: PyTree
-    history: Dict[str, list]  # loss/gap/sigma/gamma/k per epoch
+    history: Dict[str, list]  # loss/gap/sigma/gamma/k per epoch (pre-update)
     masks: Optional[jax.Array]  # (num_epochs, num_workers) worker weights
+    final_loss: float = float("nan")  # F at the returned iterate (full data)
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +133,71 @@ def shard_rowwise(mesh: Mesh, tree: PyTree, axis: str = "data") -> PyTree:
     return jax.tree.map(place, tree)
 
 
+def shard_observations(
+    rows,
+    cols,
+    vals,
+    num_workers: int,
+    d: int,
+    *,
+    m: Optional[int] = None,
+    weight=None,
+):
+    """Partition matrix-completion observations into row-block worker shards.
+
+    Worker j owns the contiguous row block ``[j*ceil(d/nw), (j+1)*ceil(d/nw))``
+    (the paper's data partition along the sample axis); each observed entry is
+    routed to its row's owner. Shard sizes differ, and shard_map needs static
+    equal shapes, so every shard is padded to the largest one with
+    **zero-weight** entries at coordinate (0, 0) — exact no-ops in every
+    reduction (``tasks.MCState`` pre-masks the residual).
+
+    Returns ``(idx, yw)`` as produced by ``tasks.pack_observations``, laid out
+    so ``shard_rowwise``'s contiguous split hands worker j exactly its block.
+    Pass ``m`` to also range-check the column indices (recommended — the
+    downstream gather/segment chains clip silently). Runs on host (numpy):
+    this is one-time data layout, not epoch work.
+    """
+    import numpy as np
+
+    rows_np = np.asarray(rows, np.int64)
+    cols_np = np.asarray(cols, np.int64)
+    vals_np = np.asarray(vals, np.float32)
+    w_np = (
+        np.ones_like(vals_np)
+        if weight is None
+        else np.asarray(weight, np.float32)
+    )
+    if not (rows_np.shape == cols_np.shape == vals_np.shape == w_np.shape):
+        raise ValueError("rows/cols/vals/weight must have identical shapes")
+    if rows_np.size and (rows_np.min() < 0 or rows_np.max() >= d):
+        raise ValueError(f"row indices must lie in [0, {d})")
+    # Out-of-range columns would be silently clipped/dropped by the gather/
+    # segment chains downstream — reject them here while shapes are concrete.
+    if cols_np.size and cols_np.min() < 0:
+        raise ValueError("column indices must be nonnegative")
+    if m is not None and cols_np.size and cols_np.max() >= m:
+        raise ValueError(f"column indices must lie in [0, {m})")
+
+    block = -(-d // num_workers)  # ceil: worker j owns rows [j*block, (j+1)*block)
+    owner = np.minimum(rows_np // block, num_workers - 1)
+    sizes = np.bincount(owner, minlength=num_workers)
+    p_max = max(int(sizes.max(initial=0)), 1)
+
+    order = np.argsort(owner, kind="stable")
+    owner_sorted = owner[order]
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    slot = owner_sorted * p_max + (np.arange(order.size) - starts[owner_sorted])
+
+    idx = np.zeros((num_workers * p_max, 2), np.int32)
+    yw = np.zeros((num_workers * p_max, 2), np.float32)  # weight-0 padding
+    idx[slot, 0] = rows_np[order]
+    idx[slot, 1] = cols_np[order]
+    yw[slot, 0] = vals_np[order]
+    yw[slot, 1] = w_np[order]
+    return jnp.asarray(idx), jnp.asarray(yw)
+
+
 # ---------------------------------------------------------------------------
 # Kernelized tasks — power_matvec Pallas ops on the power-iteration hot path
 # ---------------------------------------------------------------------------
@@ -135,8 +205,9 @@ def shard_rowwise(mesh: Mesh, tree: PyTree, axis: str = "data") -> PyTree:
 
 class KernelizedTask:
     """Delegating task wrapper that routes the streaming matvecs of the
-    power iteration through ``kernels/power_matvec`` (paper Alg. 2 lines 5-10,
-    the per-epoch hot path).
+    power iteration through the Pallas kernels (paper Alg. 2 lines 5-10, the
+    per-epoch hot path): ``kernels/power_matvec`` for the dense-state tasks,
+    ``kernels/mc_matvec`` for the observed-entry (COO) completion gradient.
 
     On TPU each call is a single-HBM-pass blocked Pallas kernel; elsewhere the
     ops dispatch to the pure-jnp reference (``power_matvec/ref.py``), so the
@@ -166,6 +237,8 @@ class KernelizedTask:
         if isinstance(s, tasks.LogisticState):  # A = X^T (P - H)
             pv = self._base._probs(s) @ v - v[s.y]
             return pm_ops.rmatvec(s.x, pv, **self._kw)
+        if isinstance(s, tasks.MCState):  # A = P_Omega(W - M), COO values resid
+            return mc_ops.matvec(s.rows, s.cols, s.resid, v, self._base.d, **self._kw)
         return self._base.matvec(s, v)
 
     def rmatvec(self, s, u: jax.Array) -> jax.Array:
@@ -175,6 +248,8 @@ class KernelizedTask:
             t = pm_ops.matvec(s.x, u, **self._kw)
             p = self._base._probs(s)
             return p.T @ t - jnp.zeros((self._base.m,), t.dtype).at[s.y].add(t)
+        if isinstance(s, tasks.MCState):
+            return mc_ops.rmatvec(s.rows, s.cols, s.resid, u, self._base.m, **self._kw)
         return self._base.rmatvec(s, u)
 
 
@@ -389,7 +464,14 @@ def fit(
         history["sigma"].append(float(aux.sigma))
         history["gamma"].append(float(aux.gamma))
         history["k"].append(k)
-    return DFWFitResult(iterate=it, state=state, history=history, masks=masks)
+    # Loss at the returned iterate (history is pre-update; see frank_wolfe.fit).
+    # The plain sum over the row-sharded state is already the global loss, and
+    # straggler weights never apply here: this is the true full-data F.
+    final_loss = float(jax.jit(ktask.local_loss)(state))
+    return DFWFitResult(
+        iterate=it, state=state, history=history, masks=masks,
+        final_loss=final_loss,
+    )
 
 
 def fit_serial(
@@ -420,5 +502,6 @@ def fit_serial(
         callback=callback,
     )
     return DFWFitResult(
-        iterate=res.iterate, state=res.state, history=res.history, masks=None
+        iterate=res.iterate, state=res.state, history=res.history, masks=None,
+        final_loss=res.final_loss,
     )

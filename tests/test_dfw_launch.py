@@ -48,6 +48,7 @@ _PROBLEM = """
 """
 
 
+@pytest.mark.slow  # subprocess: fresh jax init + 8 fake devices
 def test_sharded_equals_serial_mtls():
     """shard_map driver == serial driver on MTLS + line search (8 workers)."""
     out = _run(_PROBLEM + """
@@ -71,6 +72,7 @@ def test_sharded_equals_serial_mtls():
     assert "OK" in out
 
 
+@pytest.mark.slow  # subprocess: fresh jax init + 8 fake devices
 def test_sharded_equals_serial_logistic():
     """shard_map driver == serial driver on multinomial logistic (8 workers)."""
     out = _run(_PROBLEM + """
@@ -89,6 +91,51 @@ def test_sharded_equals_serial_logistic():
     assert "OK" in out
 
 
+@pytest.mark.slow  # subprocess: fresh jax init + 8 fake devices
+def test_sharded_equals_serial_matrix_completion():
+    """shard_map driver == serial driver on matrix completion: row-block entry
+    sharding with zero-weight padding, COO sufficient information (8 workers)."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import tasks, low_rank
+        from repro.launch import dfw
+
+        d, m, rank = 64, 48, 5
+        key = jax.random.PRNGKey(0)
+        ku, kv, ko = jax.random.split(key, 3)
+        U = jnp.linalg.qr(jax.random.normal(ku, (d, rank)))[0]
+        V = jnp.linalg.qr(jax.random.normal(kv, (m, rank)))[0]
+        sv = jnp.linspace(1.0, 0.2, rank); sv = sv / jnp.sum(sv)
+        W = (U * sv) @ V.T
+        mask = jax.random.bernoulli(ko, 0.35, (d, m))
+        rows, cols = jnp.nonzero(mask)
+        vals = W[rows, cols]
+
+        task = tasks.MatrixCompletion(d=d, m=m)
+        cfg = dfw.DFWConfig(mu=1.5, num_epochs=10, schedule="const:2",
+                            step_size="linesearch")
+        idx, yw = tasks.pack_observations(rows, cols, vals)
+        ser = dfw.fit_serial(task, idx, yw, cfg=cfg, key=jax.random.PRNGKey(1))
+        idx8, yw8 = dfw.shard_observations(rows, cols, vals, 8, d, m=m)
+        dist = dfw.fit(task, idx8, yw8, cfg=cfg, key=jax.random.PRNGKey(1),
+                       num_workers=8)
+        np.testing.assert_allclose(ser.history["loss"], dist.history["loss"],
+                                   rtol=1e-5)
+        np.testing.assert_allclose(ser.history["gap"], dist.history["gap"],
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(ser.history["sigma"], dist.history["sigma"],
+                                   rtol=1e-4)
+        np.testing.assert_allclose(ser.final_loss, dist.final_loss, rtol=1e-5)
+        W1 = low_rank.materialize(ser.iterate)
+        W2 = low_rank.materialize(dist.iterate)
+        assert float(jnp.max(jnp.abs(W1 - W2))) < 1e-6
+        assert dist.final_loss < 0.3 * dist.history["loss"][0]  # it converges
+        print("matrix completion sharded == serial OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow  # subprocess: fresh jax init + 8 fake devices
 def test_sampled_worker_mode_converges():
     """Bernoulli worker sampling (paper's straggler model): some workers drop
     every epoch, the run still converges, and masks are recorded."""

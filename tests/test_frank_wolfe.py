@@ -55,6 +55,78 @@ def test_k_schedule_unknown_name_raises():
         k_schedule("const")  # malformed: missing :K suffix
 
 
+def test_k_schedule_rejects_zero_iterations():
+    """Regression: const:0 used to be accepted and power_iterations(0) then
+    returned u=0, sigma=0 — silently corrupting the FW update and the gap."""
+    with pytest.raises(ValueError, match="K must be >= 1"):
+        k_schedule("const:0")
+    with pytest.raises(ValueError, match="K must be >= 1"):
+        k_schedule("const:-3")
+    with pytest.raises(ValueError, match="c must be > 0"):
+        k_schedule("linear:0")
+    with pytest.raises(ValueError, match="c must be > 0"):
+        k_schedule("linear:-0.5")
+
+
+def test_zero_power_iterations_rejected_everywhere():
+    from repro.core.frank_wolfe import make_epoch_step
+    from repro.core.power_method import power_iterations
+
+    task = tasks.MultiTaskLeastSquares(d=8, m=6)
+    with pytest.raises(ValueError, match="num_power_iters"):
+        make_epoch_step(task, 1.0, 0)
+    with pytest.raises(ValueError, match="num_iters"):
+        power_iterations(lambda v: v, lambda u: u,
+                         jnp.ones((6,)), 0)
+
+
+def test_fw_update_gamma_one_annihilates_old_factors():
+    """Regression: a full step (gamma==1, reachable at any t since the line
+    search clips to [0,1]) means W <- S = -mu u v^T. The alpha-underflow floor
+    used to keep the old factors' s entries live, resurrecting the previous
+    iterate at full scale."""
+    d, m, mu = 7, 5, 2.0
+    key = jax.random.PRNGKey(0)
+    it = low_rank.init(4, d, m)
+    for t in range(2):  # build a nontrivial iterate first (t > 0)
+        u = jax.random.normal(jax.random.fold_in(key, t), (d,))
+        v = jax.random.normal(jax.random.fold_in(key, 10 + t), (m,))
+        u, v = u / jnp.linalg.norm(u), v / jnp.linalg.norm(v)
+        it = low_rank.fw_update(it, u, v, 0.5, mu)
+    assert float(jnp.linalg.norm(low_rank.materialize(it))) > 0.1
+
+    u1 = jax.random.normal(jax.random.fold_in(key, 99), (d,))
+    v1 = jax.random.normal(jax.random.fold_in(key, 98), (m,))
+    u1, v1 = u1 / jnp.linalg.norm(u1), v1 / jnp.linalg.norm(v1)
+    it = low_rank.fw_update(it, u1, v1, 1.0, mu)
+    np.testing.assert_allclose(np.asarray(low_rank.materialize(it)),
+                               np.asarray(-mu * jnp.outer(u1, v1)),
+                               rtol=1e-6, atol=1e-6)
+    # the follow-up epoch still behaves: a partial step blends S into the new W
+    u2 = jax.random.normal(jax.random.fold_in(key, 97), (d,))
+    v2 = jax.random.normal(jax.random.fold_in(key, 96), (m,))
+    u2, v2 = u2 / jnp.linalg.norm(u2), v2 / jnp.linalg.norm(v2)
+    w_next = low_rank.materialize(low_rank.fw_update(it, u2, v2, 0.25, mu))
+    want = 0.75 * np.asarray(-mu * jnp.outer(u1, v1)) + 0.25 * np.asarray(
+        -mu * jnp.outer(u2, v2))
+    np.testing.assert_allclose(np.asarray(w_next), want, rtol=1e-5, atol=1e-6)
+
+
+def test_fit_final_loss_is_returned_iterate_loss():
+    """history[t] is the *pre-update* loss (documented contract); the loss of
+    the returned iterate is exposed as final_loss and must match an explicit
+    evaluation of the returned state."""
+    x, y, _ = _mtls_problem(jax.random.PRNGKey(20), n=400, d=20, m=15)
+    task = tasks.MultiTaskLeastSquares(d=20, m=15)
+    res = fit(task, task.init_state(x, y), mu=1.0, num_epochs=6,
+              key=jax.random.PRNGKey(21), schedule="const:2",
+              step_size="linesearch")
+    want = float(task.local_loss(res.state))
+    np.testing.assert_allclose(res.final_loss, want, rtol=1e-6)
+    # on a strictly-decreasing run the stale history[-1] overstates the loss
+    assert res.final_loss < res.history["loss"][-1]
+
+
 def _mtls_problem(key, n=1500, d=40, m=30, rank=5):
     ku, kv, kx = jax.random.split(key, 3)
     u = jnp.linalg.qr(jax.random.normal(ku, (d, rank)))[0]

@@ -5,6 +5,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.core import dfw_head
@@ -12,6 +13,7 @@ from repro.launch import serve, train
 from repro.models import lm
 
 
+@pytest.mark.slow  # full train-checkpoint-resume convergence loop
 def test_train_loop_reduces_loss_and_resumes():
     with tempfile.TemporaryDirectory() as d:
         _, _, hist1 = train.train(
