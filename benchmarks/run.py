@@ -27,6 +27,8 @@ def main() -> None:
 
     suites = {
         "table1_comm_cost": comm_cost.run,
+        "table1_comm_sweep": (lambda: comm_cost.run_sweep(fast=True))
+        if args.fast else comm_cost.run_sweep,
         "fig1_mtls": (lambda: mtls_convergence.run(epochs=15, n=8000, d=128, m=128))
         if args.fast else mtls_convergence.run,
         "fig2_logistic": (lambda: logistic_convergence.run(epochs=12, n=4000, d=96, m=48))

@@ -2,7 +2,8 @@
 
 Subpackages:
     core      — the paper's contribution (distributed FW for trace-norm balls)
-    kernels   — Pallas TPU kernels (power matvec, rank-1 update, flash attn)
+    comm      — pluggable power-method collectives (dense / int8 / top-k EF)
+    kernels   — Pallas TPU kernels (power matvec, quantize, flash attn, ...)
     models    — 10-arch model zoo (dense/MoE/VLM/audio/hybrid/SSM)
     configs   — exact published configs + smoke variants
     launch    — mesh, sharding rules, train/serve/dryrun drivers

@@ -1,0 +1,22 @@
+"""Pluggable communication subsystem for the distributed power method.
+
+See ``base.py`` for the reducer contract, ``int8.py``/``topk.py`` for the
+compressed implementations, and ``docs/ALGORITHMS.md`` ("Communication
+layer") for the extended Table-1 and when compression is safe.
+"""
+from . import base, int8, topk
+from .base import DenseReducer, Reducer, make_reducer
+from .int8 import Int8Reducer, verify_quantize_kernels
+from .topk import TopKReducer
+
+__all__ = [
+    "base",
+    "int8",
+    "topk",
+    "Reducer",
+    "DenseReducer",
+    "Int8Reducer",
+    "TopKReducer",
+    "make_reducer",
+    "verify_quantize_kernels",
+]

@@ -1,0 +1,155 @@
+"""Pluggable collectives for the distributed power method.
+
+The paper's whole efficiency argument (Table 1) is that only O(d+m)
+power-iteration vectors cross the wire per round. A ``Reducer`` makes the
+*encoding* of those vectors a tunable axis: the power method asks it to sum
+the workers' local contributions (``A_j v`` / ``A_j^T u``) over the data
+mesh, and the reducer decides what actually hits the network —
+
+    ``dense``    exact f32 psum (today's behavior, the paper's master),
+    ``int8``     stochastic-rounding quantize -> s8 psum -> dequantize,
+                 one f32 scale pmax per vector (``comm/int8.py``),
+    ``topk:r``   magnitude sparsification with per-worker error-feedback
+                 residuals, index+value all-gather (``comm/topk.py``).
+
+Only the power-iteration *vector* psums are rerouted; the epoch's scalar
+psums (loss, <W, grad>, line-search terms) stay exact — compressing a
+handful of f32 scalars saves nothing and silently corrupts step sizes and
+the duality-gap certificate.
+
+State contract: ``init_state(d, m)`` returns a per-worker pytree (empty for
+stateless reducers) that the caller threads through every ``reduce`` call —
+through the epoch's ``fori_loop`` and across epochs as part of the sharded
+state (each worker keeps its own residuals). ``reduce`` is pure and works
+serially (``axis_name=None``: the "sum" over one worker, with compression
+noise still applied — the serial run simulates the distributed encoding) and
+inside shard_map.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Union
+
+import jax
+
+AxisName = Optional[Union[str, Sequence[str]]]
+PyTree = Any
+
+
+class Reducer:
+    """Interface of a compressed collective (see module docstring).
+
+    ``spec`` is the parseable name (``make_reducer(r.spec)`` round-trips).
+    """
+
+    spec: str = "base"
+
+    def init_state(self, d: int, m: int) -> PyTree:
+        """Per-worker reducer state for (d,)-slot "u" and (m,)-slot "v"."""
+        return ()
+
+    def reduce(
+        self,
+        x: jax.Array,
+        state: PyTree,
+        *,
+        slot: str,
+        key: jax.Array,
+        axis_name: AxisName = None,
+        weight=None,
+    ) -> tuple:
+        """Sum local contributions ``x`` over ``axis_name``.
+
+        ``slot`` ("u" | "v") names which per-shape buffer of ``state``
+        belongs to this call; ``key`` feeds stochastic encodings and must
+        differ per call (the caller folds the iteration index in). Returns
+        ``(global_sum_estimate, new_state)``.
+
+        ``weight`` is the caller's straggler mask for this worker (``x`` is
+        already scaled by it; ``None`` means full participation). Stateless
+        reducers can ignore it — a masked worker's ``x`` is exactly zero —
+        but *stateful* ones must: a sampled-out worker has to contribute
+        nothing this round (not its stale residual) and leave its state
+        untouched, or the driver's unbiased-reweighting argument breaks.
+        """
+        raise NotImplementedError
+
+    def wire_bytes(self, dim: int, num_workers: int) -> int:
+        """Analytic wire bytes of one ``reduce`` of a (dim,) f32 vector
+        (ring all-reduce factor 2x, all-gather 1x of the gathered shape) —
+        the extended-Table-1 entries; ``launch/hlo_analysis`` measures the
+        same convention."""
+        raise NotImplementedError
+
+
+def psum(x: jax.Array, axis_name: AxisName) -> jax.Array:
+    return x if axis_name is None else jax.lax.psum(x, axis_name)
+
+
+def pmax(x: jax.Array, axis_name: AxisName) -> jax.Array:
+    return x if axis_name is None else jax.lax.pmax(x, axis_name)
+
+
+def fold_axis_index(key: jax.Array, axis_name: AxisName) -> jax.Array:
+    """Decorrelate per-worker randomness: fold each mesh axis index into the
+    (replicated) key. No-op outside shard_map."""
+    if axis_name is None:
+        return key
+    names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    for name in names:
+        key = jax.random.fold_in(key, jax.lax.axis_index(name))
+    return key
+
+
+class DenseReducer(Reducer):
+    """Exact f32 psum — byte-for-byte today's collective.
+
+    Exists so the reducer plumbing itself can be validated bit-for-bit
+    against the un-injected path (``tests/test_comm.py``); the drivers map
+    ``comm="dense"`` to ``reducer=None`` (the identical legacy code path)
+    rather than through this class.
+    """
+
+    spec = "dense"
+
+    def reduce(self, x, state, *, slot, key, axis_name=None, weight=None):
+        return psum(x, axis_name), state
+
+    def wire_bytes(self, dim: int, num_workers: int) -> int:
+        return 2 * 4 * dim  # ring all-reduce: 2x the f32 vector
+
+
+def make_reducer(
+    spec: str,
+    *,
+    num_workers: int = 1,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+) -> Reducer:
+    """Parse a ``comm=`` spec into a reducer.
+
+    - ``"dense"``   exact psum
+    - ``"int8"``    stochastic-rounding s8 psum (needs ``num_workers`` to
+                    size the per-worker integer budget 127 // N)
+    - ``"topk:r"``  keep the r largest-|.| components per vector, error
+                    feedback for the rest
+
+    ``use_pallas``/``interpret`` route the int8 quantize/dequantize pair
+    through the ``kernels/quantize`` Pallas kernels (TPU) or the jnp ref.
+    """
+    from . import int8 as int8_mod
+    from . import topk as topk_mod
+
+    if spec == "dense":
+        return DenseReducer()
+    if spec == "int8":
+        return int8_mod.Int8Reducer(
+            num_workers=num_workers, use_pallas=use_pallas, interpret=interpret
+        )
+    if spec.startswith("topk:"):
+        k = int(spec.split(":")[1])
+        if k < 1:
+            raise ValueError(f"comm spec {spec!r}: k must be >= 1")
+        return topk_mod.TopKReducer(k=k)
+    raise ValueError(
+        f"unknown comm spec {spec!r} (expected 'dense', 'int8' or 'topk:r')"
+    )

@@ -1,0 +1,77 @@
+"""Top-k sparsifying reducer with per-worker error feedback.
+
+Each worker sends only the k largest-magnitude components of its corrected
+contribution ``c = x + e`` (e = residual of everything it never sent); the
+master sum is reassembled from an index+value all-gather and the unsent mass
+``c - topk(c)`` becomes the next residual. Error feedback is what makes
+aggressive sparsification safe: the compression error is *fed back*, not
+dropped, so the cumulative transmitted signal tracks the cumulative true
+signal (classic EF-SGD argument — for a constant input the deviation of the
+running mean from the truth decays as O(1/T); ``tests/test_comm.py`` pins
+both properties).
+
+Wire cost per reduce: two all-gathers of (N, k) — int32 indices + f32 values,
+``8 * N * k`` bytes versus the dense ``8 * dim``. Compression wins while
+``N * k < dim``: right for the big (d,) u-vectors, marginal for small m.
+
+The residuals are genuinely per-worker state: under shard_map every worker
+carries its own {"u": (d,), "v": (m,)} buffers, threaded through the epoch as
+part of the sharded state pytree (``launch/dfw`` shards the leading worker
+axis) and across epochs by the driver loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import base
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKReducer(base.Reducer):
+    k: int = 32
+
+    @property
+    def spec(self) -> str:  # type: ignore[override]
+        return f"topk:{self.k}"
+
+    def init_state(self, d: int, m: int) -> Dict[str, jax.Array]:
+        return {
+            "u": jnp.zeros((d,), jnp.float32),
+            "v": jnp.zeros((m,), jnp.float32),
+        }
+
+    def reduce(self, x, state, *, slot, key, axis_name=None, weight=None):
+        e = state[slot]
+        c = x.astype(jnp.float32) + e
+        k = min(self.k, c.shape[0])
+        _, idx = jax.lax.top_k(jnp.abs(c), k)
+        vals = jnp.take(c, idx)  # signed top-k components
+        if weight is not None:
+            # Straggler mask: a sampled-out worker (weight 0) must send
+            # nothing — its x is zero but its residual e is not, and leaking
+            # top-k(e) into the aggregate would bias the reweighted sum. It
+            # also keeps e frozen: it didn't transmit anything this round.
+            alive = jnp.asarray(weight, jnp.float32) > 0.0
+            vals = jnp.where(alive, vals, 0.0)
+        sparse_local = jnp.zeros_like(c).at[idx].set(vals)
+        new_state = dict(state)
+        new_e = c - sparse_local  # unsent mass -> next round
+        if weight is not None:
+            new_e = jnp.where(alive, new_e, e)
+        new_state[slot] = new_e
+        if axis_name is None:
+            return sparse_local, new_state
+        # index+value all-gather, then every worker reassembles the sum;
+        # duplicate indices across workers accumulate via scatter-add.
+        gi = jax.lax.all_gather(idx, axis_name)  # (N, k) int32
+        gv = jax.lax.all_gather(vals, axis_name)  # (N, k) f32
+        total = jnp.zeros_like(c).at[gi.reshape(-1)].add(gv.reshape(-1))
+        return total, new_state
+
+    def wire_bytes(self, dim: int, num_workers: int) -> int:
+        k = min(self.k, dim)
+        return num_workers * k * (4 + 4)  # gathered int32 idx + f32 vals

@@ -89,12 +89,23 @@ def make_epoch_step(
     *,
     step_size: str = "default",
     axis_name: AxisName = None,
+    reducer=None,
 ) -> Callable:
     """Returns ``epoch(state, it, t, key, worker_weight=1.) -> (state, it, aux)``.
 
     ``num_power_iters`` is static (compile-time); the driver re-jits per
     distinct K(t) value — a handful of compilations for the log schedule.
     ``worker_weight`` is the straggler mask (see power_method docstring).
+
+    ``reducer`` (``repro.comm.Reducer``) reroutes the power method's *vector*
+    collectives through a compressed encoding. The scalar psums below — loss,
+    <W, grad>, the line-search numerator/denominator — always stay exact:
+    they are O(1) on the wire, and corrupting them would bias the step size
+    and the duality-gap certificate rather than just the LMO direction. With
+    a reducer the epoch signature gains a threaded per-worker state:
+    ``epoch(state, it, t, key, worker_weight, comm_state) ->
+    (state, it, aux, comm_state)`` (default ``None`` keeps the legacy 3-tuple
+    contract bit for bit).
     """
     if step_size not in ("default", "linesearch"):
         raise ValueError(step_size)
@@ -112,19 +123,37 @@ def make_epoch_step(
         t: jax.Array,
         key: jax.Array,
         worker_weight: Optional[jax.Array] = None,
-    ) -> Tuple[PyTree, low_rank.FactoredIterate, EpochAux]:
+        comm_state: PyTree = None,
+    ):
         t = jnp.asarray(t, jnp.float32)
         # All shards derive the same v0 from the replicated key (paper's
         # shared-seed trick: zero communication).
         v0 = sphere_vector(jax.random.fold_in(key, jnp.asarray(t, jnp.int32)), task.m)
-        res: PowerResult = power_iterations(
-            partial(task.matvec, state),
-            partial(task.rmatvec, state),
-            v0,
-            num_power_iters,
-            axis_name=axis_name,
-            worker_weight=worker_weight,
-        )
+        if reducer is None:
+            res: PowerResult = power_iterations(
+                partial(task.matvec, state),
+                partial(task.rmatvec, state),
+                v0,
+                num_power_iters,
+                axis_name=axis_name,
+                worker_weight=worker_weight,
+            )
+        else:
+            # Distinct stream from v0's: fold the epoch index, then a tag.
+            ckey = jax.random.fold_in(
+                jax.random.fold_in(key, jnp.asarray(t, jnp.int32)), 0xC033
+            )
+            res, comm_state = power_iterations(
+                partial(task.matvec, state),
+                partial(task.rmatvec, state),
+                v0,
+                num_power_iters,
+                axis_name=axis_name,
+                worker_weight=worker_weight,
+                reducer=reducer,
+                comm_state=comm_state,
+                key=ckey,
+            )
 
         w = 1.0 if worker_weight is None else worker_weight
         loss = _psum(w * task.local_loss(state), axis_name)
@@ -141,7 +170,10 @@ def make_epoch_step(
 
         state = task.update(state, res.u, res.v, gamma, mu)
         it = low_rank.fw_update(it, res.u, res.v, gamma, mu)
-        return state, it, EpochAux(loss=loss, gap=gap, sigma=res.sigma, gamma=gamma)
+        aux = EpochAux(loss=loss, gap=gap, sigma=res.sigma, gamma=gamma)
+        if reducer is None:
+            return state, it, aux
+        return state, it, aux, comm_state
 
     return epoch
 
@@ -175,6 +207,7 @@ def fit(
     axis_name: AxisName = None,
     epoch_wrapper: Optional[Callable[[Callable], Callable]] = None,
     callback: Optional[Callable[[int, EpochAux], None]] = None,
+    reducer=None,
 ) -> FitResult:
     """Run DFW-TRACE for ``num_epochs``.
 
@@ -198,22 +231,36 @@ def fit(
     with ``axis_name`` naming the mesh axes so the epoch's psums resolve.
     Callers needing extra per-epoch inputs (e.g. the worker-sampling masks of
     the paper's straggler mode) should drive ``make_epoch_step`` directly, as
-    ``launch/dfw.fit`` does, rather than thread them through this loop."""
+    ``launch/dfw.fit`` does, rather than thread them through this loop.
+
+    ``reducer`` routes the power method's vector collectives through a
+    compressed encoding (``repro.comm``); serially this *simulates* the
+    compression noise of a distributed run (axis_name=None sums one worker),
+    which is what the convergence-vs-bits benchmarks sweep. The reducer's
+    per-worker state is threaded across epochs here; ``epoch_wrapper`` (if
+    any) must then preserve the extended 6-in/4-out epoch signature."""
     sched = k_schedule(schedule)
     it = low_rank.init(num_epochs, task.d, task.m)
     compiled: Dict[int, Callable] = {}
     history: Dict[str, list] = {"loss": [], "gap": [], "sigma": [], "gamma": [], "k": []}
+    comm_state = None if reducer is None else reducer.init_state(task.d, task.m)
 
     for t in range(num_epochs):
         k = sched(t)
         if k not in compiled:
             step = make_epoch_step(
-                task, mu, k, step_size=step_size, axis_name=axis_name
+                task, mu, k, step_size=step_size, axis_name=axis_name,
+                reducer=reducer,
             )
             if epoch_wrapper is not None:
                 step = epoch_wrapper(step)
             compiled[k] = jax.jit(step)
-        state, it, aux = compiled[k](state, it, jnp.float32(t), key)
+        if reducer is None:
+            state, it, aux = compiled[k](state, it, jnp.float32(t), key)
+        else:
+            state, it, aux, comm_state = compiled[k](
+                state, it, jnp.float32(t), key, None, comm_state
+            )
         if callback is not None:
             callback(t, aux)
         history["loss"].append(float(aux.loss))

@@ -52,18 +52,33 @@ def power_iterations(
     *,
     axis_name: AxisName = None,
     worker_weight: Optional[jax.Array] = None,
-) -> PowerResult:
+    reducer=None,
+    comm_state=None,
+    key: Optional[jax.Array] = None,
+):
     """Run ``num_iters`` two-sided power iterations on the implicit operator.
 
     ``matvec(v)``/``rmatvec(u)`` compute the *local* contribution ``A_j v`` /
     ``A_j^T u``; this routine psums them over ``axis_name`` (paper's
-    aggregate-and-broadcast) and normalizes.
+    aggregate-and-broadcast) and normalizes. The estimate ``sigma = ||A^T u||``
+    is the norm of the *last* aggregated ``rmatvec`` — carried out of the loop,
+    never recomputed, so an epoch costs exactly ``2 * num_iters`` collective
+    rounds (regression-pinned in tests/test_power_method.py).
 
     ``worker_weight`` implements straggler mitigation: a 0/1 (or fractional)
     scalar multiplying the local contribution. Because each iteration
     renormalizes, dropping workers only reorients the estimate toward the
     surviving data's gradient — an unbiased LMO for the surviving partition
     (same weighting argument the paper uses for SVA).
+
+    ``reducer`` (a ``repro.comm.Reducer``) reroutes the two vector
+    aggregations through a compressed collective. Default ``None`` preserves
+    the exact-psum behavior bit for bit and returns a plain ``PowerResult``;
+    with a reducer the return is ``(PowerResult, comm_state)`` where
+    ``comm_state`` is the reducer's threaded per-worker state (pass the
+    previous epoch's back in; ``None`` starts fresh via
+    ``reducer.init_state``) and ``key`` feeds stochastic encodings (defaults
+    to a constant key — pass a per-epoch key for unbiasedness across epochs).
 
     The two-sided iteration guarantees ``u^T A v = ||A^T u|| >= 0``, so the
     trace-norm LMO solution is always ``S* = -mu u v^T`` with no sign fix.
@@ -74,20 +89,54 @@ def power_iterations(
             "(0 returns u=0, sigma=0 and silently corrupts the caller)"
         )
     w = 1.0 if worker_weight is None else worker_weight
-
-    def body(_, carry):
-        _, v = carry
-        u = _psum(w * matvec(v), axis_name)
-        u = u / (jnp.linalg.norm(u) + _EPS)
-        vv = _psum(w * rmatvec(u), axis_name)
-        v = vv / (jnp.linalg.norm(vv) + _EPS)
-        return (u, v)
-
     d_probe = matvec(v0)  # shapes only; cheap under jit (dead if K>=1 reuses)
     u0 = jnp.zeros_like(d_probe)
-    u, v = jax.lax.fori_loop(0, num_iters, body, (u0, v0))
-    sigma = jnp.linalg.norm(_psum(w * rmatvec(u), axis_name))
-    return PowerResult(u=u, v=v, sigma=sigma)
+    sigma0 = jnp.zeros((), jnp.float32)
+
+    if reducer is None:
+
+        def body(_, carry):
+            _, v, _ = carry
+            u = _psum(w * matvec(v), axis_name)
+            u = u / (jnp.linalg.norm(u) + _EPS)
+            vv = _psum(w * rmatvec(u), axis_name)
+            nv = jnp.linalg.norm(vv)
+            v = vv / (nv + _EPS)
+            return (u, v, nv)
+
+        u, v, sigma = jax.lax.fori_loop(0, num_iters, body, (u0, v0, sigma0))
+        return PowerResult(u=u, v=v, sigma=sigma)
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if comm_state is None:
+        comm_state = reducer.init_state(u0.shape[0], v0.shape[0])
+
+    def body(i, carry):
+        _, v, _, cs = carry
+        ki = jax.random.fold_in(key, i)
+        # worker_weight rides along so stateful reducers can tell a masked
+        # worker (whose w*matvec is zero but whose residual is not) from a
+        # live one — see comm/base.Reducer.reduce.
+        uu, cs = reducer.reduce(
+            w * matvec(v), cs, slot="u",
+            key=jax.random.fold_in(ki, 0), axis_name=axis_name,
+            weight=worker_weight,
+        )
+        u = uu / (jnp.linalg.norm(uu) + _EPS)
+        vv, cs = reducer.reduce(
+            w * rmatvec(u), cs, slot="v",
+            key=jax.random.fold_in(ki, 1), axis_name=axis_name,
+            weight=worker_weight,
+        )
+        nv = jnp.linalg.norm(vv)
+        v = vv / (nv + _EPS)
+        return (u, v, nv, cs)
+
+    u, v, sigma, comm_state = jax.lax.fori_loop(
+        0, num_iters, body, (u0, v0, sigma0, comm_state)
+    )
+    return PowerResult(u=u, v=v, sigma=sigma), comm_state
 
 
 def power_method_dense(

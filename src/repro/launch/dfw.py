@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .. import comm as comm_lib
 from ..compat import shard_map_compat
 from ..core import frank_wolfe, low_rank, tasks
 from ..core.frank_wolfe import EpochAux
@@ -67,12 +68,20 @@ class DFWConfig:
     (at least one worker is always kept). ``reweight`` scales the survivors
     by num_workers/num_alive so psum'd aggregates (loss, gap, line-search
     terms) remain estimates of the full-data quantities.
+
+    ``comm`` selects the collective encoding for the power method's vector
+    exchanges (``repro.comm``): "dense" (exact f32 psum — byte-for-byte
+    today's path), "int8" (stochastic-rounding s8 psum, ~4x fewer wire
+    bytes), or "topk:r" (top-r sparsification with per-worker error
+    feedback). Scalar aggregates stay exact under every setting. Applies to
+    all three tasks — the reducer wraps the psum, not the task.
     """
 
     mu: float
     num_epochs: int
     schedule: str = "const:2"  # K(t); see frank_wolfe.k_schedule
     step_size: str = "default"  # "default" (2/(t+2)) or "linesearch"
+    comm: str = "dense"  # power-method collective encoding; see repro.comm
     data_axis: str = "data"
     sample_prob: float = 1.0
     reweight: bool = True
@@ -341,6 +350,7 @@ def make_sharded_epoch(
     mesh: Mesh,
     num_power_iters: int,
     state_example: PyTree,
+    reducer: Optional[comm_lib.Reducer] = None,
 ) -> Callable:
     """shard_map-wrapped epoch: ``(state, it, t, key, mask) -> (state, it, aux)``.
 
@@ -348,23 +358,49 @@ def make_sharded_epoch(
     the PRNG key are replicated; ``mask`` is the (num_workers,) worker-weight
     vector of which each worker consumes its own entry. This is exactly the
     ``epoch_wrapper`` contract of ``frank_wolfe.fit`` plus the mask plumbing.
+
+    With a ``reducer`` the signature grows a threaded per-worker comm state:
+    ``(state, it, t, key, mask, comm) -> (state, it, aux, comm)`` where every
+    ``comm`` leaf carries a leading worker axis sharded over ``cfg.data_axis``
+    (leaf (nw, d) outside, (1, d) per worker inside) — the error-feedback
+    residuals live with the worker that owns them, exactly like the task
+    state rows.
     """
     axis = cfg.data_axis
     ep = frank_wolfe.make_epoch_step(
-        task, cfg.mu, num_power_iters, step_size=cfg.step_size, axis_name=axis
+        task, cfg.mu, num_power_iters, step_size=cfg.step_size, axis_name=axis,
+        reducer=reducer,
     )
-
-    def step(state, it, t, key, mask):
-        return ep(state, it, t, key, worker_weight=mask[0])
 
     state_spec = row_specs(state_example, axis)
     it_spec = low_rank.FactoredIterate(u=P(), s=P(), v=P(), alpha=P(), count=P())
     aux_spec = EpochAux(P(), P(), P(), P())
+
+    if reducer is None:
+
+        def step(state, it, t, key, mask):
+            return ep(state, it, t, key, worker_weight=mask[0])
+
+        return shard_map_compat(
+            step,
+            mesh,
+            in_specs=(state_spec, it_spec, P(), P(), P(axis)),
+            out_specs=(state_spec, it_spec, aux_spec),
+        )
+
+    def step(state, it, t, key, mask, comm):
+        cs = jax.tree.map(lambda a: a[0], comm)  # drop the worker axis
+        state, it, aux, cs = ep(
+            state, it, t, key, worker_weight=mask[0], comm_state=cs
+        )
+        return state, it, aux, jax.tree.map(lambda a: a[None], cs)
+
+    comm_spec = jax.tree.map(lambda _: P(axis), reducer.init_state(task.d, task.m))
     return shard_map_compat(
         step,
         mesh,
-        in_specs=(state_spec, it_spec, P(), P(), P(axis)),
-        out_specs=(state_spec, it_spec, aux_spec),
+        in_specs=(state_spec, it_spec, P(), P(), P(axis), comm_spec),
+        out_specs=(state_spec, it_spec, aux_spec, comm_spec),
     )
 
 
@@ -418,6 +454,18 @@ def fit(
     nw = mesh.shape[cfg.data_axis]
     max_rank = _resolve_max_rank(cfg)
 
+    # "dense" routes through the un-injected legacy epoch (identical code
+    # path, trajectories reproduced exactly); compressed specs build a
+    # reducer sized to this mesh's worker count.
+    reducer = (
+        None
+        if cfg.comm == "dense"
+        else comm_lib.make_reducer(
+            cfg.comm, num_workers=nw,
+            use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+        )
+    )
+
     ktask = (
         kernelize(task, use_pallas=cfg.use_pallas, interpret=cfg.interpret)
         if cfg.kernelize
@@ -428,10 +476,29 @@ def fit(
         probe_rows = min(x.shape[0], max(nw, 64))
         probe = task.init_state(x[:probe_rows], y[:probe_rows])
         verify_kernelized(task, ktask, probe, jax.random.fold_in(key, 0x5EED))
+    if isinstance(reducer, comm_lib.Int8Reducer) and cfg.verify_kernels:
+        comm_lib.verify_quantize_kernels(
+            jax.random.fold_in(key, 0x17F8),
+            num_workers=nw, use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+        )
 
     xs, ys = shard_rowwise(mesh, (x, y), cfg.data_axis)
     state = ktask.init_state(xs, ys)
     it = low_rank.init(max_rank, task.d, task.m)
+
+    comm_state = None
+    if reducer is not None:
+        # Per-worker reducer state: every worker starts from the reducer's
+        # own init_state values (not zeros — the contract allows nonzero
+        # initialization), stacked along a leading worker axis sharded like
+        # the data rows.
+        comm_state = jax.tree.map(
+            lambda leaf: jax.device_put(
+                jnp.broadcast_to(leaf, (nw,) + leaf.shape),
+                NamedSharding(mesh, P(cfg.data_axis)),
+            ),
+            reducer.init_state(task.d, task.m),
+        )
 
     masks = None
     if cfg.sample_prob < 1.0:
@@ -453,10 +520,17 @@ def fit(
         k = sched(t)
         if k not in compiled:
             compiled[k] = jax.jit(
-                make_sharded_epoch(ktask, cfg, mesh, k, state_example=state)
+                make_sharded_epoch(
+                    ktask, cfg, mesh, k, state_example=state, reducer=reducer
+                )
             )
         mask_t = full if masks is None else masks[t]
-        state, it, aux = compiled[k](state, it, jnp.float32(t), key, mask_t)
+        if reducer is None:
+            state, it, aux = compiled[k](state, it, jnp.float32(t), key, mask_t)
+        else:
+            state, it, aux, comm_state = compiled[k](
+                state, it, jnp.float32(t), key, mask_t, comm_state
+            )
         if callback is not None:
             callback(t, aux)
         history["loss"].append(float(aux.loss))
@@ -485,11 +559,24 @@ def fit_serial(
 ) -> DFWFitResult:
     """Single-device reference run with the *same* config (and the same
     kernelized matvec path) as ``fit`` — the baseline every sharded run is
-    compared against in tests and benchmarks."""
+    compared against in tests and benchmarks.
+
+    ``cfg.comm`` is honored with a one-worker reducer: the serial run
+    *simulates* the compressed encoding (int8 at full 127-level budget,
+    top-k with one worker's error feedback), which is what the
+    convergence-vs-bits sweeps compare against."""
     ktask = (
         kernelize(task, use_pallas=cfg.use_pallas, interpret=cfg.interpret)
         if cfg.kernelize
         else task
+    )
+    reducer = (
+        None
+        if cfg.comm == "dense"
+        else comm_lib.make_reducer(
+            cfg.comm, num_workers=1,
+            use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+        )
     )
     res = frank_wolfe.fit(
         ktask,
@@ -500,6 +587,7 @@ def fit_serial(
         schedule=cfg.schedule,
         step_size=cfg.step_size,
         callback=callback,
+        reducer=reducer,
     )
     return DFWFitResult(
         iterate=res.iterate, state=res.state, history=res.history, masks=None,

@@ -4,7 +4,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import flash_attention, mc_matvec, power_matvec, rank1_update
+from repro.kernels import (
+    flash_attention,
+    mc_matvec,
+    power_matvec,
+    quantize,
+    rank1_update,
+)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -92,6 +98,31 @@ def test_rank1_update(n, m, dt):
     want = rank1_update.ref.rank1_update_axpy(z, y0, xv, yv, 0.7, -0.3, -0.5)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), **_tol(dt))
+
+
+@pytest.mark.parametrize("n,budget,block_n", [(512, 15, 128), (130, 127, 64),
+                                              (31, 3, 32)])
+def test_quantize_dequantize_kernel(n, budget, block_n):
+    """Fused stochastic-round quantize + dequantize vs the jnp oracle.
+
+    Exact equality: noise is an explicit operand, so kernel and ref compute
+    the identical floor (see kernels/quantize/kernel.py)."""
+    x = jax.random.normal(KEY, (n,)) * 3.0
+    noise = jax.random.uniform(jax.random.fold_in(KEY, 30), (n,))
+    scale = jnp.max(jnp.abs(x))
+    q = quantize.ops.quantize(x, noise, scale, budget=budget,
+                              block_n=block_n, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(q), np.asarray(quantize.ref.quantize(x, noise, scale, budget)))
+    assert q.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= budget
+    deq = quantize.ops.dequantize(q, scale, budget=budget,
+                                  block_n=block_n, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(deq), np.asarray(quantize.ref.dequantize(q, scale, budget)),
+        rtol=1e-6, atol=1e-6)
+    # the roundtrip lands within one grid step of the input
+    assert float(jnp.max(jnp.abs(deq - x))) <= float(scale) / budget * (1 + 1e-6)
 
 
 @pytest.mark.parametrize("causal", [True, False])
