@@ -29,7 +29,7 @@ from pathlib import Path
 from .common import emit
 
 F32 = 4
-_CACHE_VERSION = 2  # bump when the measured quantities change meaning
+_CACHE_VERSION = 3  # bump when the measured quantities change meaning
 
 COMM_MODES = ("dense", "int8", "topk:16")
 
@@ -61,7 +61,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys, json
 sys.path.insert(0, "SRC")
 import jax, jax.numpy as jnp
-from repro.core import tasks, low_rank
+from repro.core import tasks, low_rank, frank_wolfe
 from repro.launch import dfw, hlo_analysis
 from repro import comm as comm_lib
 
@@ -81,23 +81,23 @@ else:
     y = jax.ShapeDtypeStruct((n, m), jnp.float32)
     st = tasks.MTLSState(x=x, y=y, r=y)
 it = jax.eval_shape(lambda: low_rank.init(30, d, m))
-t = jax.ShapeDtypeStruct((), jnp.float32)
-kk = jax.ShapeDtypeStruct((2,), jnp.uint32)
 mask = jax.ShapeDtypeStruct((nw,), jnp.float32)
 
 out = {}
 for cm in P["modes"]:
     cfg = dfw.DFWConfig(mu=1.0, num_epochs=1, schedule=f"const:{K}",
                         step_size="linesearch", comm=cm)
-    red = None if cm == "dense" else comm_lib.make_reducer(cm, num_workers=nw)
+    red = comm_lib.make_reducer(cm, num_workers=nw)
     ep = dfw.make_sharded_epoch(task, cfg, mesh, K, state_example=st,
                                 reducer=red)
-    args = [st, it, t, kk, mask]
-    if red is not None:
-        args.append(jax.tree.map(
+    carry = frank_wolfe.EpochCarry(
+        state=st, iterate=it,
+        comm_state=jax.tree.map(
             lambda l: jax.ShapeDtypeStruct((nw,) + l.shape, l.dtype),
-            red.init_state(d, m)))
-    comp = jax.jit(ep).lower(*args).compile()
+            red.init_state(d, m)),
+        t=jax.ShapeDtypeStruct((), jnp.int32),
+        key=jax.ShapeDtypeStruct((2,), jnp.uint32))
+    comp = jax.jit(ep).lower(carry, mask).compile()
     res = hlo_analysis.analyze(comp.as_text())
     out[cm] = {"collective_bytes": res["collective_bytes_total"],
                "counts": res["collective_count"]}

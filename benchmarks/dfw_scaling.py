@@ -12,11 +12,14 @@ Two sweeps:
    schedule families, plus the total number of power iterations each spends
    (the communication cost driver: 2 psums of d+m floats per iteration).
 
-Timing: every fit() call builds fresh jitted epoch closures, so a
-warmup-run-then-timed-run pattern would still pay compilation. Both sweeps
-instead record per-epoch wall times via the driver callback and report the
-MEDIAN epoch — the few compile-bearing epochs (one per distinct K(t) value)
-land in the upper tail and drop out.
+Timing: every fit() call builds fresh jitted closures, so a
+warmup-run-then-timed-run pattern would still pay compilation. The engine
+executes scan-compiled segments (callback granularity is per *segment*), so
+both sweeps cap ``block_epochs`` to get several equal-shape blocks — which
+share one executable — record per-epoch wall time per block via the driver
+callback, and report the MEDIAN block: the compile-bearing first block lands
+in the upper tail and drops out. ``benchmarks/engine_bench.py`` is the
+dedicated scan-vs-legacy dispatch-overhead benchmark.
 """
 from __future__ import annotations
 
@@ -46,13 +49,13 @@ w = jax.random.normal(jax.random.fold_in(key, 1), (d, m))
 y = x @ (w / jnp.linalg.norm(w, ord="nuc"))
 task = tasks.MultiTaskLeastSquares(d=d, m=m)
 cfg = dfw.DFWConfig(mu=1.0, num_epochs=epochs, schedule="const:2",
-                    step_size="linesearch", verify_kernels=False)
+                    step_size="linesearch", verify_kernels=False,
+                    block_epochs=max(1, epochs // 4))
 
 ts, prev = [], [time.perf_counter()]
-def cb(t, aux):
-    jax.block_until_ready(aux)
+def cb(start, aux):  # per-segment: aux is an EpochAux of (block,) np arrays
     now = time.perf_counter()
-    ts.append(now - prev[0])
+    ts.append((now - prev[0]) / len(aux.loss))
     prev[0] = now
 
 if NDEV == 1:
@@ -114,13 +117,13 @@ def _schedule_sweep(n, d, m, epochs):
     task = tasks.MultiTaskLeastSquares(d=d, m=m)
     for sched in ("const:1", "const:2", "log", "log_half", "linear:0.2"):
         cfg = dfw.DFWConfig(mu=1.0, num_epochs=epochs, schedule=sched,
-                            step_size="linesearch", verify_kernels=False)
+                            step_size="linesearch", verify_kernels=False,
+                            block_epochs=max(1, epochs // 4))
         ts, prev = [], [time.perf_counter()]
 
-        def cb(t, aux):
-            jax.block_until_ready(aux)
+        def cb(start, aux):  # per-segment (see module docstring)
             now = time.perf_counter()
-            ts.append(now - prev[0])
+            ts.append((now - prev[0]) / len(aux.loss))
             prev[0] = now
 
         res = dfw.fit_serial(task, x, y, cfg=cfg, key=jax.random.PRNGKey(1),

@@ -15,6 +15,7 @@ def main() -> None:
     from . import (
         comm_cost,
         dfw_scaling,
+        engine_bench,
         imagenet_head,
         kernel_bench,
         logistic_convergence,
@@ -41,6 +42,8 @@ def main() -> None:
         "fig5_matrix_completion": (
             lambda: matrix_completion.run(d=128, m=96, obs=0.3, epochs=8))
         if args.fast else matrix_completion.run,
+        "engine_overhead": (lambda: engine_bench.run(epochs=96, block=24))
+        if args.fast else engine_bench.run,
         "thm2_power_accuracy": power_accuracy.run,
         "kernels": kernel_bench.run,
         "roofline": roofline.run,

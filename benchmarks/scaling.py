@@ -39,16 +39,21 @@ else:
     ss = tasks.MTLSState(x=P("data"), y=P("data"), r=P("data"))
     isp = low_rank.FactoredIterate(u=P(), s=P(), v=P(), alpha=P(), count=P())
     asp = frank_wolfe.EpochAux(P(), P(), P(), P())
+    csp = frank_wolfe.EpochCarry(state=ss, iterate=isp, comm_state=(),
+                                 t=P(), key=P())
     step = frank_wolfe.make_epoch_step(task, 1.0, K, step_size="linesearch",
                                        axis_name="data")
-    wrapped = shard_map_compat(step, mesh, in_specs=(ss, isp, P(), P()),
-                               out_specs=(ss, isp, asp))
+    wrapped = shard_map_compat(step, mesh, in_specs=(csp,),
+                               out_specs=(csp, asp))
 x = jax.ShapeDtypeStruct((n, d), jnp.float32)
 y = jax.ShapeDtypeStruct((n, m), jnp.float32)
 st = tasks.MTLSState(x=x, y=y, r=y)
 it = jax.eval_shape(lambda: low_rank.init(30, d, m))
-comp = jax.jit(wrapped).lower(st, it, jax.ShapeDtypeStruct((), jnp.float32),
-                              jax.ShapeDtypeStruct((2,), jnp.uint32)).compile()
+carry = frank_wolfe.EpochCarry(
+    state=st, iterate=it, comm_state=(),
+    t=jax.ShapeDtypeStruct((), jnp.int32),
+    key=jax.ShapeDtypeStruct((2,), jnp.uint32))
+comp = jax.jit(wrapped).lower(carry).compile()
 res = hlo_analysis.analyze(comp.as_text())
 print(json.dumps({"flops": res["flops"], "coll": res["collective_bytes_total"]}))
 """

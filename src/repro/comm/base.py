@@ -101,12 +101,15 @@ def fold_axis_index(key: jax.Array, axis_name: AxisName) -> jax.Array:
 
 
 class DenseReducer(Reducer):
-    """Exact f32 psum — byte-for-byte today's collective.
+    """Exact f32 psum — byte-for-byte the paper's master aggregate.
 
-    Exists so the reducer plumbing itself can be validated bit-for-bit
-    against the un-injected path (``tests/test_comm.py``); the drivers map
-    ``comm="dense"`` to ``reducer=None`` (the identical legacy code path)
-    rather than through this class.
+    This is the **default** reducer: the epoch carry
+    (``core/frank_wolfe.EpochCarry``) always threads a ``comm_state``, and
+    dense's is the empty pytree ``()``, so the serial and sharded drivers
+    run one uniform code path under every encoding (``comm="dense"`` routes
+    here; its ``reduce`` *is* ``jax.lax.psum``, so trajectories are exact).
+    The plumbing itself is validated bit-for-bit against a raw-psum oracle
+    in ``tests/test_comm.py``.
     """
 
     spec = "dense"

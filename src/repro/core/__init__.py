@@ -11,8 +11,26 @@ Public surface:
     low_rank.FactoredIterate            — O(t(d+m)) iterate store (§2.2)
     dfw_head.DFWHeadTrainer             — trace-norm head training on LM zoo
 """
-from . import baselines, dfw_head, frank_wolfe, low_rank, power_method, tasks, trace_norm
-from .frank_wolfe import EpochAux, FitResult, fit, k_schedule, make_epoch_step
+from . import (
+    baselines,
+    dfw_head,
+    engine,
+    frank_wolfe,
+    low_rank,
+    power_method,
+    tasks,
+    trace_norm,
+)
+from .engine import EngineResult, Segment, plan_segments, run_epochs
+from .frank_wolfe import (
+    EpochAux,
+    EpochCarry,
+    FitResult,
+    fit,
+    init_carry,
+    k_schedule,
+    make_epoch_step,
+)
 from .low_rank import FactoredIterate
 from .power_method import PowerResult, power_iterations, sphere_vector, top_singular_pair
 from .tasks import (
@@ -31,9 +49,16 @@ __all__ = [
     "power_method",
     "tasks",
     "trace_norm",
+    "engine",
+    "EngineResult",
+    "Segment",
+    "plan_segments",
+    "run_epochs",
     "EpochAux",
+    "EpochCarry",
     "FitResult",
     "fit",
+    "init_carry",
     "k_schedule",
     "make_epoch_step",
     "FactoredIterate",

@@ -20,11 +20,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.compat import shard_map_compat
 from repro.models import lm
 
-from . import frank_wolfe, low_rank, tasks
-from .frank_wolfe import EpochAux
+from . import engine, frank_wolfe, low_rank, tasks
 
 
 def extract_features(
@@ -88,22 +86,19 @@ def sharded_fit(
     num_epochs: int = 20,
     schedule: str = "const:2",
     key: Optional[jax.Array] = None,
+    gap_tol: Optional[float] = None,
 ) -> HeadFitResult:
     """DFW-TRACE with the sample axis sharded over ``data_axes`` — the
     production path the multi-pod dry-run lowers. Every epoch's cross-device
-    traffic is 2*K psums of (d + m) floats (paper Table 1)."""
+    traffic is 2*K psums of (d + m) floats (paper Table 1). Execution is the
+    device-resident engine: each constant-K(t) segment is one ``lax.scan``
+    inside shard_map, so a ``const:K`` head fit is a single jit dispatch;
+    ``gap_tol`` stops on the duality-gap certificate at segment granularity.
+    """
     task = tasks.MultinomialLogistic(d=x.shape[1], m=num_classes)
     ax = data_axes if len(data_axes) > 1 else data_axes[0]
     state_specs = tasks.LogisticState(x=P(ax), y=P(ax), z=P(ax))
-    it_specs = low_rank.FactoredIterate(u=P(), s=P(), v=P(), alpha=P(), count=P())
-    aux_specs = EpochAux(P(), P(), P(), P())
-
-    def wrapper(step):
-        return shard_map_compat(
-            step, mesh,
-            in_specs=(state_specs, it_specs, P(), P()),
-            out_specs=(state_specs, it_specs, aux_specs),
-        )
+    wrapper = engine.shard_map_segment_wrapper(mesh, ax, state_specs)
 
     state = task.init_state(
         jax.device_put(x, NamedSharding(mesh, P(ax))),
@@ -113,8 +108,9 @@ def sharded_fit(
         task, state, mu=mu, num_epochs=num_epochs,
         key=key if key is not None else jax.random.PRNGKey(0),
         schedule=schedule, step_size="default",
-        axis_name=data_axes if len(data_axes) > 1 else data_axes[0],
-        epoch_wrapper=wrapper,
+        axis_name=ax,
+        segment_wrapper=wrapper,
+        gap_tol=gap_tol,
     )
     return HeadFitResult(iterate=res.iterate, history=res.history,
                          final_loss=res.final_loss)

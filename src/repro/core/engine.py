@@ -1,0 +1,417 @@
+"""Device-resident epoch engine: scan-compiled K(t) segments.
+
+The DFW-Trace loop is hundreds to thousands of *cheap* O(d+m) epochs, so a
+driver that pays one jit dispatch and four blocking ``float(...)`` transfers
+per epoch is dominated by Python and PCIe, not by the algorithm. This engine
+keeps whole runs on device:
+
+1. **Segment plan.** ``plan_segments`` partitions the K(t) schedule into
+   maximal constant-K runs (optionally capped at ``block_epochs``). A
+   ``const:K`` schedule is one segment; ``log`` is O(log T) segments.
+2. **Scan compilation.** Each segment executes as a single ``jax.lax.scan``
+   over the unified ``EpochCarry`` — one dispatch per segment, with the
+   per-epoch ``EpochAux`` rows written into the scan's preallocated
+   on-device output buffers. Worker straggler masks are precomputed as a
+   ``(num_epochs, nw)`` array and indexed by the carried epoch counter
+   inside the scan. Segments sharing a (K, length) shape share one
+   executable.
+3. **Gap-certificate early stop.** The psum'd duality gap rides the scan
+   carry as a ``done`` flag: once ``gap <= gap_tol`` every remaining epoch
+   in the segment is a ``lax.cond`` no-op (static shapes preserved, compute
+   skipped), and the host stops launching segments at the next boundary.
+   ``epochs_run`` counts the epochs that actually executed.
+
+Host transfers happen only at segment boundaries (and only when early
+stopping or a callback needs them) plus one final history fetch — all via
+explicit ``jax.device_get``, so a run under
+``jax.transfer_guard_device_to_host("disallow")`` proves the loop is
+device-resident (regression-pinned in ``tests/test_engine.py``).
+
+``mode="legacy"`` reproduces the pre-engine driver — one dispatch per epoch
+and four blocking scalar pulls — on the same unified carry; it exists as the
+trajectory-equivalence oracle and the baseline ``benchmarks/engine_bench.py``
+measures against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..compat import shard_map_compat
+from . import low_rank
+from .frank_wolfe import (
+    EpochAux,
+    EpochCarry,
+    init_carry,
+    k_schedule,
+    make_epoch_step,
+)
+from .power_method import AxisName
+
+PyTree = Any
+
+
+class Segment(NamedTuple):
+    """A maximal run of epochs sharing one (static) power-iteration count."""
+
+    start: int  # first epoch index
+    length: int  # number of epochs
+    k: int  # K(t) throughout the segment
+
+
+def plan_segments(
+    schedule: str, num_epochs: int, block_epochs: Optional[int] = None
+) -> List[Segment]:
+    """Partition ``[0, num_epochs)`` into maximal constant-K segments.
+
+    ``block_epochs`` caps segment length: early stopping acts at segment
+    granularity, so the cap bounds how many epochs a converged run can
+    execute past its certificate (and how stale a progress callback gets).
+    Equal-length blocks of the same K share one compiled executable, so
+    chopping a long ``const:K`` run costs extra dispatches, not compiles.
+    """
+    if num_epochs < 1:
+        raise ValueError(f"num_epochs={num_epochs}: need at least one epoch")
+    if block_epochs is not None and block_epochs < 1:
+        raise ValueError(f"block_epochs={block_epochs}: must be >= 1")
+    sched = k_schedule(schedule)
+    segments: List[Segment] = []
+    t = 0
+    while t < num_epochs:
+        k = sched(t)
+        end = t + 1
+        while (
+            end < num_epochs
+            and sched(end) == k
+            and (block_epochs is None or end - t < block_epochs)
+        ):
+            end += 1
+        segments.append(Segment(start=t, length=end - t, k=k))
+        t = end
+    return segments
+
+
+def resolve_max_rank(max_rank: Optional[int], num_epochs: int) -> int:
+    """Factored-iterate capacity. One factor is appended per epoch and
+    ``low_rank.fw_update`` clamps out-of-range writes silently, so
+    undersizing would corrupt the returned iterate — reject it up front.
+    (Shared by the serial and sharded drivers: one capacity contract.)"""
+    if max_rank is None:
+        return num_epochs
+    if max_rank < num_epochs:
+        raise ValueError(
+            f"max_rank={max_rank} < num_epochs={num_epochs}: every "
+            "epoch appends one factor, so the iterate store would overflow"
+        )
+    return max_rank
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """``history`` lists are truncated to ``epochs_run``. ``stats`` counts
+    the engine's interactions with the runtime — the quantities the
+    dispatch/sync regression tests pin:
+
+    - ``segments_planned`` / ``segments_run``: plan size vs segments
+      actually launched (early stop skips the tail),
+    - ``dispatches``: jitted calls issued,
+    - ``compilations``: distinct executables built (segments sharing a
+      (K, length) shape reuse one),
+    - ``host_syncs``: explicit ``jax.device_get`` round-trips (legacy mode
+      counts its four blocking per-epoch scalar pulls here).
+    """
+
+    carry: EpochCarry
+    history: Dict[str, list]
+    epochs_run: int
+    stats: Dict[str, int]
+
+
+def _segment_step(
+    task,
+    mu: float,
+    k: int,
+    length: int,
+    *,
+    step_size: str,
+    axis_name: AxisName,
+    reducer,
+    gap_tol: Optional[float],
+    has_masks: bool,
+) -> Callable:
+    """One segment as a pure function: ``length`` epochs under ``lax.scan``.
+
+    Signature (before any shard_map wrapping):
+    ``seg(carry, done, epochs_run[, masks]) -> (carry, done, epochs_run, aux)``
+    where ``aux`` leaves are ``(length,)`` — the scan's preallocated
+    on-device history rows — and ``masks`` is the full ``(num_epochs, nw)``
+    straggler-weight array, indexed at ``[carry.t, 0]`` inside the scan
+    (inside shard_map every worker holds its own ``(num_epochs, 1)`` column).
+    Epochs after the gap certificate fires are ``lax.cond`` no-ops emitting
+    NaN aux rows (truncated away by the host).
+    """
+    epoch = make_epoch_step(
+        task, mu, k, step_size=step_size, axis_name=axis_name, reducer=reducer
+    )
+    tol = jnp.float32(-jnp.inf if gap_tol is None else gap_tol)
+
+    def segment(carry, done, epochs_run, masks=None):
+        def body(c, _):
+            def live(c):
+                carry, done, epochs_run = c
+                w = masks[carry.t, 0] if has_masks else None
+                carry, aux = epoch(carry, worker_weight=w)
+                return (carry, done | (aux.gap <= tol), epochs_run + 1), aux
+
+            def skip(c):
+                nan = jnp.float32(jnp.nan)
+                return c, EpochAux(loss=nan, gap=nan, sigma=nan, gamma=nan)
+
+            done = c[1]
+            return jax.lax.cond(done, skip, live, c)
+
+        (carry, done, epochs_run), aux = jax.lax.scan(
+            body, (carry, done, epochs_run), None, length=length
+        )
+        return carry, done, epochs_run, aux
+
+    return segment
+
+
+def sharded_carry_spec(
+    axis_or_axes, state_spec: PyTree, comm_state_example: PyTree = ()
+):
+    """shard_map PartitionSpecs for an ``EpochCarry``: task state rows
+    sharded over the data axes, iterate/counter/key replicated, and every
+    reducer-state leaf carried with a *leading worker axis* sharded like the
+    data rows (dense's ``()`` has no leaves — encoding-agnostic).
+
+    ``comm_state_example`` is one worker's (unstacked) reducer state."""
+    from jax.sharding import PartitionSpec as P
+
+    ax = axis_or_axes
+    return EpochCarry(
+        state=state_spec,
+        iterate=low_rank.FactoredIterate(u=P(), s=P(), v=P(), alpha=P(), count=P()),
+        comm_state=jax.tree.map(lambda _: P(ax), comm_state_example),
+        t=P(),
+        key=P(),
+    )
+
+
+def strip_worker_axis(carry: EpochCarry) -> EpochCarry:
+    """Inside a shard_map region: drop the leading worker axis off the comm
+    leaves — a worker owns its (1, ...) slice of the stacked reducer state."""
+    return carry._replace(
+        comm_state=jax.tree.map(lambda a: a[0], carry.comm_state)
+    )
+
+
+def restore_worker_axis(carry: EpochCarry) -> EpochCarry:
+    return carry._replace(
+        comm_state=jax.tree.map(lambda a: a[None], carry.comm_state)
+    )
+
+
+def shard_map_segment_wrapper(
+    mesh,
+    axis_or_axes,
+    state_spec: PyTree,
+    *,
+    comm_state_example: PyTree = (),
+    has_masks: bool = False,
+) -> Callable[[Callable], Callable]:
+    """Build the canonical ``segment_wrapper``: shard_map with the task
+    state row-sharded, iterate/scalars/key replicated, straggler masks
+    column-sharded, and reducer state carried with a leading worker axis
+    (sharded like the data rows) that is stripped inside the region.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    ax = axis_or_axes
+    carry_spec = sharded_carry_spec(ax, state_spec, comm_state_example)
+    aux_spec = EpochAux(P(), P(), P(), P())
+
+    def wrap(seg_fn):
+        def step(carry, done, epochs_run, *masks):
+            carry, done, epochs_run, aux = seg_fn(
+                strip_worker_axis(carry), done, epochs_run, *masks
+            )
+            return restore_worker_axis(carry), done, epochs_run, aux
+
+        mask_specs = (P(None, ax),) if has_masks else ()
+        return shard_map_compat(
+            step,
+            mesh,
+            in_specs=(carry_spec, P(), P()) + mask_specs,
+            out_specs=(carry_spec, P(), P(), aux_spec),
+        )
+
+    return wrap
+
+
+_HISTORY_KEYS = ("loss", "gap", "sigma", "gamma")
+
+
+def run_epochs(
+    task,
+    state: PyTree,
+    *,
+    mu: float,
+    num_epochs: int,
+    key: jax.Array,
+    schedule: str = "const:2",
+    step_size: str = "default",
+    axis_name: AxisName = None,
+    reducer=None,
+    comm_state: Optional[PyTree] = None,
+    iterate: Optional[low_rank.FactoredIterate] = None,
+    max_rank: Optional[int] = None,
+    masks: Optional[jax.Array] = None,
+    gap_tol: Optional[float] = None,
+    block_epochs: Optional[int] = None,
+    segment_wrapper: Optional[Callable[[Callable], Callable]] = None,
+    callback: Optional[Callable[[int, EpochAux], None]] = None,
+    mode: str = "scan",
+) -> EngineResult:
+    """Run up to ``num_epochs`` DFW-Trace epochs, device-resident.
+
+    ``comm_state`` defaults to ``reducer.init_state(task.d, task.m)`` (one
+    worker's state); a sharded driver passes its worker-stacked version,
+    matching whatever its ``segment_wrapper`` strips/restores. ``iterate``
+    defaults to a fresh ``low_rank.init`` with ``max_rank`` capacity
+    (validated >= num_epochs). ``masks`` is the full ``(num_epochs, nw)``
+    straggler-weight schedule or ``None`` for unweighted epochs.
+
+    ``mode="scan"`` (production): one dispatch per segment, host transfers
+    at boundaries only. ``mode="legacy"``: the pre-engine loop — per-epoch
+    dispatch plus four blocking scalar pulls — same math, same carry, kept
+    as the equivalence oracle and overhead baseline.
+    """
+    if mode not in ("scan", "legacy"):
+        raise ValueError(f"mode={mode!r}: expected 'scan' or 'legacy'")
+    if reducer is None:
+        from ..comm.base import DenseReducer
+
+        reducer = DenseReducer()
+    if comm_state is None:
+        comm_state = reducer.init_state(task.d, task.m)
+    if iterate is None:
+        iterate = low_rank.init(
+            resolve_max_rank(max_rank, num_epochs), task.d, task.m
+        )
+    if masks is not None:
+        if masks.shape[0] != num_epochs:
+            raise ValueError(
+                f"masks has {masks.shape[0]} rows for {num_epochs} epochs"
+            )
+        if masks.shape[1] > 1 and segment_wrapper is None:
+            # The scan body reads masks[t, 0]: each worker's own column after
+            # shard_map slices the (num_epochs, nw) array. Without a wrapper
+            # there is one "worker", and silently using column 0 would make a
+            # multi-worker mask schedule measure nothing.
+            raise ValueError(
+                f"masks has {masks.shape[1]} worker columns but no "
+                "segment_wrapper shards them; pass a shard_map wrapper "
+                "(engine.shard_map_segment_wrapper) or a single-column mask"
+            )
+
+    segments = plan_segments(
+        schedule, num_epochs, 1 if mode == "legacy" else block_epochs
+    )
+    stats = {
+        "segments_planned": len(segments),
+        "segments_run": 0,
+        "dispatches": 0,
+        "compilations": 0,
+        "host_syncs": 0,
+    }
+    has_masks = masks is not None
+    wrapper = segment_wrapper if segment_wrapper is not None else (lambda f: f)
+
+    compiled: Dict[tuple, Callable] = {}
+
+    def get_compiled(seg: Segment) -> Callable:
+        sig = (seg.k, seg.length)
+        if sig not in compiled:
+            fn = _segment_step(
+                task, mu, seg.k, seg.length,
+                step_size=step_size, axis_name=axis_name, reducer=reducer,
+                gap_tol=gap_tol, has_masks=has_masks,
+            )
+            compiled[sig] = jax.jit(wrapper(fn))
+            stats["compilations"] += 1
+        return compiled[sig]
+
+    carry = init_carry(state, iterate, key, comm_state)
+    done = jnp.zeros((), jnp.bool_)
+    nrun = jnp.zeros((), jnp.int32)
+    history: Dict[str, list] = {k: [] for k in _HISTORY_KEYS}
+    history["k"] = []
+
+    if mode == "legacy":
+        # Pre-engine behavior: one dispatch + four blocking float() pulls
+        # per epoch (each an implicit device->host transfer, like the old
+        # driver's `float(aux.loss)` lines).
+        epochs_run = 0
+        for seg in segments:
+            args = (carry, done, nrun) + ((masks,) if has_masks else ())
+            carry, done, nrun, aux = get_compiled(seg)(*args)
+            stats["dispatches"] += 1
+            stats["segments_run"] += 1
+            row = [float(aux.loss[0]), float(aux.gap[0]),
+                   float(aux.sigma[0]), float(aux.gamma[0])]
+            stats["host_syncs"] += 4
+            for name, val in zip(_HISTORY_KEYS, row):
+                history[name].append(val)
+            history["k"].append(seg.k)
+            epochs_run += 1
+            if callback is not None:
+                callback(seg.start, jax.device_get(aux))
+                stats["host_syncs"] += 1
+            if gap_tol is not None and row[1] <= gap_tol:
+                break
+        return EngineResult(
+            carry=carry, history=history, epochs_run=epochs_run, stats=stats
+        )
+
+    # (Segment, host EpochAux | None, device EpochAux) per segment run; the
+    # host slot is filled when a callback already fetched the block, so the
+    # final history assembly never transfers the same rows twice.
+    aux_blocks: List[tuple] = []
+    for seg in segments:
+        args = (carry, done, nrun) + ((masks,) if has_masks else ())
+        carry, done, nrun, aux = get_compiled(seg)(*args)
+        stats["dispatches"] += 1
+        stats["segments_run"] += 1
+        host_aux = None
+        if callback is not None:
+            host_aux = jax.device_get(aux)
+            stats["host_syncs"] += 1
+            callback(seg.start, host_aux)
+        aux_blocks.append((seg, host_aux, aux))
+        if gap_tol is not None:
+            # The only mid-run sync: one scalar at the segment boundary,
+            # deciding whether to launch the next segment.
+            stats["host_syncs"] += 1
+            if bool(jax.device_get(done)):
+                break
+
+    pending = [a for _, h, a in aux_blocks if h is None]
+    fetched, epochs_run = jax.device_get((pending, nrun))
+    stats["host_syncs"] += 1
+    epochs_run = int(epochs_run)
+    fetched = iter(fetched)
+    for seg, host_aux, _ in aux_blocks:
+        block = host_aux if host_aux is not None else next(fetched)
+        for name, col in zip(_HISTORY_KEYS, block):
+            history[name].extend(float(v) for v in col)
+        history["k"].extend([seg.k] * seg.length)
+    for name in history:
+        del history[name][epochs_run:]
+    return EngineResult(
+        carry=carry, history=history, epochs_run=epochs_run, stats=stats
+    )

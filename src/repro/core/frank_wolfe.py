@@ -4,23 +4,34 @@
 the implicit gradient -> step size (default 2/(t+2) or closed-form line
 search) -> sufficient-information update + factored-iterate append. The same
 function runs serially (axis_name=None) or inside shard_map over the data mesh
-axes — the paper's BSP master is just ``psum``. The multi-device driver that
-does the wrapping (mesh build, row-wise state sharding, worker sampling,
-Pallas-kernelized matvecs) lives in ``launch/dfw.py``; ``fit`` below is the
-serial/single-process driver.
+axes — the paper's BSP master is just ``psum``.
+
+**Unified carry.** Every epoch consumes and produces one ``EpochCarry``
+``(state, iterate, comm_state, t, key)``. ``comm_state`` is always present —
+an empty pytree ``()`` for the exact-psum dense reducer — so there is a single
+epoch signature regardless of the collective encoding; no caller branches on
+whether a reducer is installed.
+
+Execution lives in ``core/engine.py``: the schedule K(t) is partitioned into
+maximal constant-K segments and each segment runs as one ``jax.lax.scan`` over
+epochs, so a whole ``const:K`` run is a single jit dispatch with host
+transfers only at segment boundaries. ``fit`` below is the serial /
+single-process driver on top of that engine; the multi-worker driver (mesh
+build, row-wise state sharding, worker sampling, Pallas-kernelized matvecs)
+lives in ``launch/dfw.py``.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from functools import partial
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from . import low_rank
-from .power_method import AxisName, PowerResult, power_iterations, sphere_vector
+from .power_method import AxisName, power_iterations, sphere_vector
 from .trace_norm import duality_gap
 
 PyTree = Any
@@ -31,6 +42,38 @@ class EpochAux(NamedTuple):
     gap: jax.Array  # duality-gap estimate at W^t
     sigma: jax.Array  # power-method top-singular-value estimate
     gamma: jax.Array  # step size actually taken
+
+
+class EpochCarry(NamedTuple):
+    """Everything one FW epoch threads to the next — the single epoch
+    signature shared by the serial and sharded drivers.
+
+    ``comm_state`` is the reducer's per-worker state pytree (``()`` for the
+    dense exact-psum reducer — always present so the carry's structure never
+    depends on the collective encoding). ``t`` is the on-device epoch counter
+    (int32, so it can live inside ``lax.scan``); ``key`` is the replicated
+    run PRNG key — each epoch folds ``t`` in, never splits it, so the carry
+    key is constant across epochs (the paper's shared-seed trick).
+    """
+
+    state: PyTree  # task sufficient-information state (per-worker shard)
+    iterate: low_rank.FactoredIterate  # replicated factored W
+    comm_state: PyTree  # reducer per-worker state; () when dense
+    t: jax.Array  # () int32 epoch counter
+    key: jax.Array  # replicated PRNG key
+
+
+def init_carry(
+    state: PyTree,
+    iterate: low_rank.FactoredIterate,
+    key: jax.Array,
+    comm_state: PyTree = (),
+) -> EpochCarry:
+    """Epoch-0 carry: t = 0 on device, comm state defaulting to dense's ()."""
+    return EpochCarry(
+        state=state, iterate=iterate, comm_state=comm_state,
+        t=jnp.zeros((), jnp.int32), key=key,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -91,21 +134,20 @@ def make_epoch_step(
     axis_name: AxisName = None,
     reducer=None,
 ) -> Callable:
-    """Returns ``epoch(state, it, t, key, worker_weight=1.) -> (state, it, aux)``.
+    """Returns ``epoch(carry, worker_weight=None) -> (carry, aux)``.
 
-    ``num_power_iters`` is static (compile-time); the driver re-jits per
-    distinct K(t) value — a handful of compilations for the log schedule.
-    ``worker_weight`` is the straggler mask (see power_method docstring).
+    ``num_power_iters`` is static (compile-time); the engine compiles one
+    scan per distinct K(t) segment — a handful of compilations for the log
+    schedule. ``worker_weight`` is the straggler mask (see power_method
+    docstring); ``None`` means full participation.
 
-    ``reducer`` (``repro.comm.Reducer``) reroutes the power method's *vector*
-    collectives through a compressed encoding. The scalar psums below — loss,
-    <W, grad>, the line-search numerator/denominator — always stay exact:
-    they are O(1) on the wire, and corrupting them would bias the step size
-    and the duality-gap certificate rather than just the LMO direction. With
-    a reducer the epoch signature gains a threaded per-worker state:
-    ``epoch(state, it, t, key, worker_weight, comm_state) ->
-    (state, it, aux, comm_state)`` (default ``None`` keeps the legacy 3-tuple
-    contract bit for bit).
+    ``reducer`` (``repro.comm.Reducer``) selects the encoding of the power
+    method's *vector* collectives; ``None`` means the exact f32 psum
+    (``comm.DenseReducer``), whose per-worker state is the empty pytree — the
+    carry structure is identical under every encoding. The scalar psums below
+    — loss, <W, grad>, the line-search numerator/denominator — always stay
+    exact: they are O(1) on the wire, and corrupting them would bias the step
+    size and the duality-gap certificate rather than just the LMO direction.
     """
     if step_size not in ("default", "linesearch"):
         raise ValueError(step_size)
@@ -116,44 +158,32 @@ def make_epoch_step(
             f"num_power_iters={num_power_iters}: at least one power iteration "
             "is required (K=0 would feed a zero singular direction to the LMO)"
         )
+    if reducer is None:
+        from ..comm.base import DenseReducer  # leaf import; no cycle
 
-    def epoch(
-        state: PyTree,
-        it: low_rank.FactoredIterate,
-        t: jax.Array,
-        key: jax.Array,
-        worker_weight: Optional[jax.Array] = None,
-        comm_state: PyTree = None,
-    ):
-        t = jnp.asarray(t, jnp.float32)
+        reducer = DenseReducer()
+
+    def epoch(carry: EpochCarry, worker_weight: Optional[jax.Array] = None):
+        state, it = carry.state, carry.iterate
+        ti = jnp.asarray(carry.t, jnp.int32)
+        t = ti.astype(jnp.float32)
         # All shards derive the same v0 from the replicated key (paper's
-        # shared-seed trick: zero communication).
-        v0 = sphere_vector(jax.random.fold_in(key, jnp.asarray(t, jnp.int32)), task.m)
-        if reducer is None:
-            res: PowerResult = power_iterations(
-                partial(task.matvec, state),
-                partial(task.rmatvec, state),
-                v0,
-                num_power_iters,
-                axis_name=axis_name,
-                worker_weight=worker_weight,
-            )
-        else:
-            # Distinct stream from v0's: fold the epoch index, then a tag.
-            ckey = jax.random.fold_in(
-                jax.random.fold_in(key, jnp.asarray(t, jnp.int32)), 0xC033
-            )
-            res, comm_state = power_iterations(
-                partial(task.matvec, state),
-                partial(task.rmatvec, state),
-                v0,
-                num_power_iters,
-                axis_name=axis_name,
-                worker_weight=worker_weight,
-                reducer=reducer,
-                comm_state=comm_state,
-                key=ckey,
-            )
+        # shared-seed trick: zero communication). The reducer key is a
+        # distinct stream from v0's: fold the epoch index, then a tag.
+        ekey = jax.random.fold_in(carry.key, ti)
+        v0 = sphere_vector(ekey, task.m)
+        ckey = jax.random.fold_in(ekey, 0xC033)
+        res, comm_state = power_iterations(
+            partial(task.matvec, state),
+            partial(task.rmatvec, state),
+            v0,
+            num_power_iters,
+            axis_name=axis_name,
+            worker_weight=worker_weight,
+            reducer=reducer,
+            comm_state=carry.comm_state,
+            key=ckey,
+        )
 
         w = 1.0 if worker_weight is None else worker_weight
         loss = _psum(w * task.local_loss(state), axis_name)
@@ -171,9 +201,10 @@ def make_epoch_step(
         state = task.update(state, res.u, res.v, gamma, mu)
         it = low_rank.fw_update(it, res.u, res.v, gamma, mu)
         aux = EpochAux(loss=loss, gap=gap, sigma=res.sigma, gamma=gamma)
-        if reducer is None:
-            return state, it, aux
-        return state, it, aux, comm_state
+        return EpochCarry(
+            state=state, iterate=it, comm_state=comm_state,
+            t=ti + 1, key=carry.key,
+        ), aux
 
     return epoch
 
@@ -187,12 +218,17 @@ def make_epoch_step(
 class FitResult:
     """``history`` entries are *pre-update* measurements (see ``fit``);
     ``final_loss`` is F at the *returned* iterate — use it when reporting
-    the quality of the fitted model."""
+    the quality of the fitted model. ``epochs_run`` < the requested epoch
+    count when the gap certificate stopped the run early; histories are
+    truncated to it. ``stats`` are the engine's dispatch/compile/host-sync
+    counters (see ``core/engine.py``)."""
 
     iterate: low_rank.FactoredIterate
     state: PyTree
     history: Dict[str, list]
     final_loss: float = float("nan")
+    epochs_run: int = 0
+    stats: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 def fit(
@@ -205,70 +241,90 @@ def fit(
     schedule: str = "const:2",
     step_size: str = "default",
     axis_name: AxisName = None,
-    epoch_wrapper: Optional[Callable[[Callable], Callable]] = None,
+    segment_wrapper: Optional[Callable[[Callable], Callable]] = None,
     callback: Optional[Callable[[int, EpochAux], None]] = None,
     reducer=None,
+    max_rank: Optional[int] = None,
+    gap_tol: Optional[float] = None,
+    block_epochs: Optional[int] = None,
+    mode: str = "scan",
 ) -> FitResult:
-    """Run DFW-TRACE for ``num_epochs``.
+    """Run DFW-TRACE for up to ``num_epochs`` on the device-resident engine.
 
     **History contract.** ``history[key][t]`` records epoch t's measurements
     at W^t *before* that epoch's update — the loss/gap the power method and
     step size were computed against (matching the paper's per-epoch
-    trajectories). The loss of the *returned* iterate W^{num_epochs} never
-    appears in ``history``; it is exposed as ``FitResult.final_loss``
-    (the psum'd ``task.local_loss`` of the returned state). Benchmarks that
-    report "final loss" must use ``final_loss``, not ``history["loss"][-1]``
+    trajectories). The loss of the *returned* iterate never appears in
+    ``history``; it is exposed as ``FitResult.final_loss`` (the psum'd
+    ``task.local_loss`` of the returned state). Benchmarks that report
+    "final loss" must use ``final_loss``, not ``history["loss"][-1]``
     (which is one epoch stale).
 
-    ``epoch_wrapper`` contract: a function ``wrap(step) -> step'`` applied to
-    each freshly built epoch *before* ``jax.jit`` (one wrap per distinct K(t)
-    value). ``step'`` must preserve the positional signature
-    ``(state, iterate, t, key) -> (state, iterate, aux)`` with ``t`` a f32
-    scalar and ``key`` a replicated PRNG key; identity by default. The
-    canonical non-trivial wrapper is shard_map over the data mesh with the
-    task state row-sharded and iterate/scalars replicated — that is what
-    ``launch/dfw.py`` (and ``core/dfw_head.sharded_fit``) install, paired
+    ``max_rank`` sizes the factored-iterate store (one factor is appended
+    per epoch, so it must be >= ``num_epochs``; default exactly
+    ``num_epochs``) — the same capacity contract ``launch/dfw.DFWConfig``
+    exposes.
+
+    ``gap_tol`` stops the run once the psum'd duality-gap certificate
+    satisfies ``gap <= gap_tol`` (paper Thm 2's stopping rule), checked on
+    device every epoch and acted on at segment granularity;
+    ``FitResult.epochs_run`` records how many epochs actually executed and
+    all histories are truncated to it. ``block_epochs`` caps the scan
+    segment length, bounding how many epochs can run past the certificate.
+
+    ``callback(start_t, aux_block)`` fires once per **segment** (not per
+    epoch): ``aux_block`` is an ``EpochAux`` of host numpy arrays covering
+    epochs ``start_t .. start_t + len - 1``; rows after an early stop are
+    NaN. Per-epoch callbacks would force a device->host sync every epoch —
+    exactly the overhead the engine exists to remove. Each callback
+    invocation does force one segment-boundary sync, so leave it ``None``
+    on the hot path.
+
+    ``segment_wrapper`` contract: ``wrap(seg_fn) -> seg_fn'`` applied to
+    each segment function before ``jax.jit`` (one wrap per distinct
+    (K, length) pair). The canonical non-trivial wrapper is shard_map over
+    the data mesh — see ``engine.shard_map_segment_wrapper``, which
+    ``core/dfw_head.sharded_fit`` and ``launch/dfw.fit`` install, paired
     with ``axis_name`` naming the mesh axes so the epoch's psums resolve.
-    Callers needing extra per-epoch inputs (e.g. the worker-sampling masks of
-    the paper's straggler mode) should drive ``make_epoch_step`` directly, as
-    ``launch/dfw.fit`` does, rather than thread them through this loop.
 
     ``reducer`` routes the power method's vector collectives through a
     compressed encoding (``repro.comm``); serially this *simulates* the
     compression noise of a distributed run (axis_name=None sums one worker),
-    which is what the convergence-vs-bits benchmarks sweep. The reducer's
-    per-worker state is threaded across epochs here; ``epoch_wrapper`` (if
-    any) must then preserve the extended 6-in/4-out epoch signature."""
-    sched = k_schedule(schedule)
-    it = low_rank.init(num_epochs, task.d, task.m)
-    compiled: Dict[int, Callable] = {}
-    history: Dict[str, list] = {"loss": [], "gap": [], "sigma": [], "gamma": [], "k": []}
-    comm_state = None if reducer is None else reducer.init_state(task.d, task.m)
+    which is what the convergence-vs-bits benchmarks sweep. ``None`` is the
+    exact dense psum. ``mode="legacy"`` runs the pre-engine per-epoch
+    dispatch loop (one jit call + four blocking scalar transfers per epoch)
+    — kept as the equivalence/off-device-overhead baseline; ``"scan"`` is
+    the production path."""
+    from .engine import run_epochs  # local import: engine builds on this module
 
-    for t in range(num_epochs):
-        k = sched(t)
-        if k not in compiled:
-            step = make_epoch_step(
-                task, mu, k, step_size=step_size, axis_name=axis_name,
-                reducer=reducer,
-            )
-            if epoch_wrapper is not None:
-                step = epoch_wrapper(step)
-            compiled[k] = jax.jit(step)
-        if reducer is None:
-            state, it, aux = compiled[k](state, it, jnp.float32(t), key)
-        else:
-            state, it, aux, comm_state = compiled[k](
-                state, it, jnp.float32(t), key, None, comm_state
-            )
-        if callback is not None:
-            callback(t, aux)
-        history["loss"].append(float(aux.loss))
-        history["gap"].append(float(aux.gap))
-        history["sigma"].append(float(aux.sigma))
-        history["gamma"].append(float(aux.gamma))
-        history["k"].append(k)
+    eres = run_epochs(
+        task,
+        state,
+        mu=mu,
+        num_epochs=num_epochs,
+        key=key,
+        schedule=schedule,
+        step_size=step_size,
+        axis_name=axis_name,
+        reducer=reducer,
+        max_rank=max_rank,
+        gap_tol=gap_tol,
+        block_epochs=block_epochs,
+        segment_wrapper=segment_wrapper,
+        callback=callback,
+        mode=mode,
+    )
     # Loss at the *returned* iterate (cheap: one O(n_j) reduction outside the
     # epoch; on sharded state the plain sum is already the global loss).
-    final_loss = float(jax.jit(task.local_loss)(state))
-    return FitResult(iterate=it, state=state, history=history, final_loss=final_loss)
+    final_loss = float(jax.device_get(jax.jit(task.local_loss)(eres.carry.state)))
+    eres.stats["dispatches"] += 1
+    eres.stats["host_syncs"] += 1
+    eres.stats["compilations"] += 1
+    return FitResult(
+        iterate=eres.carry.iterate,
+        state=eres.carry.state,
+        history=eres.history,
+        final_loss=final_loss,
+        epochs_run=eres.epochs_run,
+        stats=eres.stats,
+    )

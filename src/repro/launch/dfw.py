@@ -1,7 +1,9 @@
 """Distributed DFW-Trace execution layer (paper Algorithm 2, end to end).
 
-``core/frank_wolfe.py`` builds the *math* of one FW epoch; this module builds
-the *machine* around it:
+``core/frank_wolfe.py`` builds the *math* of one FW epoch and
+``core/engine.py`` the device-resident execution engine (scan-compiled K(t)
+segments, unified ``EpochCarry``, gap-based early stop); this module builds
+the *machine* around them:
 
 - a 1-D data mesh over the available devices (``launch/mesh.py``),
 - row-wise sharding of the task state across workers (each worker owns a
@@ -10,8 +12,8 @@ the *machine* around it:
   the O(d+m) power-iteration vectors cross the network, never a d x m
   gradient (paper Table 1),
 - the paper's straggler/sampled-worker mode: a per-epoch Bernoulli schedule
-  over workers feeds the ``worker_weight`` mask of the core epoch, with
-  optional inverse-participation reweighting so aggregates stay unbiased,
+  over workers precomputed as a (num_epochs, nw) weight array, indexed
+  inside the engine's scan,
 - kernelized matvecs: the power-iteration hot path is routed through the
   ``kernels/power_matvec`` Pallas ops (dense-state tasks) or
   ``kernels/mc_matvec`` (observed-entry completion gradient) — one HBM pass
@@ -22,14 +24,18 @@ the *machine* around it:
   zero-weight no-op entries (static shapes under shard_map).
 
 The serial driver (``frank_wolfe.fit``) and this sharded driver execute the
-same jitted epoch function; they differ only in the ``epoch_wrapper`` layer,
-so their loss/gap trajectories agree to float-summation-order tolerance.
+same engine; they differ only in the ``segment_wrapper`` layer (shard_map
+over the data mesh), so their loss/gap trajectories agree to
+float-summation-order tolerance. A ``const:K`` run is a single jit dispatch
+with O(1) device->host transfers; ``gap_tol`` stops runs on the duality-gap
+certificate at segment granularity.
 
 Typical use (8 simulated hosts; see ``examples/distributed_dfw.py``)::
 
     from repro.launch import dfw
     cfg = dfw.DFWConfig(mu=1.0, num_epochs=20, schedule="log",
-                        step_size="linesearch", sample_prob=0.8)
+                        step_size="linesearch", sample_prob=0.8,
+                        gap_tol=1e-3)
     res = dfw.fit(task, x, y, cfg=cfg, key=key, num_workers=8)
 """
 from __future__ import annotations
@@ -44,7 +50,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .. import comm as comm_lib
 from ..compat import shard_map_compat
-from ..core import frank_wolfe, low_rank, tasks
+from ..core import engine, frank_wolfe, low_rank, tasks
 from ..core.frank_wolfe import EpochAux
 from ..core.power_method import sphere_vector
 from ..kernels.mc_matvec import ops as mc_ops
@@ -70,11 +76,22 @@ class DFWConfig:
     terms) remain estimates of the full-data quantities.
 
     ``comm`` selects the collective encoding for the power method's vector
-    exchanges (``repro.comm``): "dense" (exact f32 psum — byte-for-byte
-    today's path), "int8" (stochastic-rounding s8 psum, ~4x fewer wire
-    bytes), or "topk:r" (top-r sparsification with per-worker error
-    feedback). Scalar aggregates stay exact under every setting. Applies to
-    all three tasks — the reducer wraps the psum, not the task.
+    exchanges (``repro.comm``): "dense" (exact f32 psum), "int8"
+    (stochastic-rounding s8 psum, ~4x fewer wire bytes), or "topk:r" (top-r
+    sparsification with per-worker error feedback). Scalar aggregates stay
+    exact under every setting. Applies to all three tasks — the reducer
+    wraps the psum, not the task.
+
+    ``gap_tol`` stops the run once the psum'd duality-gap certificate
+    satisfies ``gap <= gap_tol`` (checked on device every epoch, acted on at
+    segment granularity — see ``core/engine.py``); the result records
+    ``epochs_run`` and truncates histories to it. Under a compressed
+    ``comm`` the certificate inherits the sigma estimate's noise, so treat
+    the stop as approximate there. ``block_epochs`` caps the scan segment
+    length, bounding both the early-stop overshoot and the staleness of a
+    progress ``callback``. ``engine`` selects the execution mode: "scan"
+    (production: one dispatch per K(t) segment) or "legacy" (per-epoch
+    dispatch + blocking scalar pulls; the overhead baseline).
     """
 
     mu: float
@@ -90,6 +107,9 @@ class DFWConfig:
     interpret: bool = False  # Pallas interpreter mode (debugging)
     verify_kernels: bool = True  # up-front kernel-vs-jnp agreement check
     max_rank: Optional[int] = None  # factored-iterate capacity (default epochs)
+    gap_tol: Optional[float] = None  # duality-gap early-stop threshold
+    block_epochs: Optional[int] = None  # max epochs per scan segment
+    engine: str = "scan"  # "scan" (device-resident) or "legacy" (per-epoch)
 
 
 @dataclasses.dataclass
@@ -97,8 +117,10 @@ class DFWFitResult:
     iterate: low_rank.FactoredIterate
     state: PyTree
     history: Dict[str, list]  # loss/gap/sigma/gamma/k per epoch (pre-update)
-    masks: Optional[jax.Array]  # (num_epochs, num_workers) worker weights
+    masks: Optional[jax.Array]  # (epochs_run, num_workers) worker weights
     final_loss: float = float("nan")  # F at the returned iterate (full data)
+    epochs_run: int = 0  # < num_epochs when gap_tol stopped the run
+    stats: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 # ---------------------------------------------------------------------------
@@ -286,7 +308,11 @@ def verify_kernelized(
 
     def rel_err(a, b):
         a, b = jnp.asarray(a), jnp.asarray(b)
-        return float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(b)) + 1e-30))
+        # Explicit device_get: this runs inside drivers whose callers may
+        # guard against implicit device->host transfers.
+        return float(jax.device_get(
+            jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(b)) + 1e-30)
+        ))
 
     err = max(
         rel_err(ktask.matvec(state, v), task.matvec(state, v)),
@@ -340,7 +366,7 @@ def worker_schedule(
 
 
 # ---------------------------------------------------------------------------
-# Sharded epoch construction
+# Sharded epoch construction (single-epoch unit; the engine wraps segments)
 # ---------------------------------------------------------------------------
 
 
@@ -352,75 +378,46 @@ def make_sharded_epoch(
     state_example: PyTree,
     reducer: Optional[comm_lib.Reducer] = None,
 ) -> Callable:
-    """shard_map-wrapped epoch: ``(state, it, t, key, mask) -> (state, it, aux)``.
+    """shard_map-wrapped single epoch: ``(carry, mask) -> (carry, aux)``.
 
-    The task state is row-sharded over ``cfg.data_axis``; iterate, scalars and
-    the PRNG key are replicated; ``mask`` is the (num_workers,) worker-weight
-    vector of which each worker consumes its own entry. This is exactly the
-    ``epoch_wrapper`` contract of ``frank_wolfe.fit`` plus the mask plumbing.
-
-    With a ``reducer`` the signature grows a threaded per-worker comm state:
-    ``(state, it, t, key, mask, comm) -> (state, it, aux, comm)`` where every
-    ``comm`` leaf carries a leading worker axis sharded over ``cfg.data_axis``
-    (leaf (nw, d) outside, (1, d) per worker inside) — the error-feedback
-    residuals live with the worker that owns them, exactly like the task
-    state rows.
+    The unified-carry analogue of one engine scan step, exposed for tests
+    and the HLO-analysis benchmarks that need exactly one epoch's compiled
+    collectives. ``carry.state`` is row-sharded over ``cfg.data_axis``;
+    iterate, scalars and the PRNG key are replicated; ``mask`` is the
+    (num_workers,) worker-weight vector of which each worker consumes its
+    own entry; every ``carry.comm_state`` leaf carries a leading worker axis
+    sharded over ``cfg.data_axis`` (leaf (nw, d) outside, (1, d) per worker
+    inside — the error-feedback residuals live with the worker that owns
+    them, exactly like the task state rows; ``()`` for dense).
     """
     axis = cfg.data_axis
+    if reducer is None:
+        reducer = comm_lib.DenseReducer()
     ep = frank_wolfe.make_epoch_step(
         task, cfg.mu, num_power_iters, step_size=cfg.step_size, axis_name=axis,
         reducer=reducer,
     )
 
-    state_spec = row_specs(state_example, axis)
-    it_spec = low_rank.FactoredIterate(u=P(), s=P(), v=P(), alpha=P(), count=P())
+    carry_spec = engine.sharded_carry_spec(
+        axis, row_specs(state_example, axis), reducer.init_state(task.d, task.m)
+    )
     aux_spec = EpochAux(P(), P(), P(), P())
 
-    if reducer is None:
+    def step(carry, mask):
+        carry, aux = ep(engine.strip_worker_axis(carry), worker_weight=mask[0])
+        return engine.restore_worker_axis(carry), aux
 
-        def step(state, it, t, key, mask):
-            return ep(state, it, t, key, worker_weight=mask[0])
-
-        return shard_map_compat(
-            step,
-            mesh,
-            in_specs=(state_spec, it_spec, P(), P(), P(axis)),
-            out_specs=(state_spec, it_spec, aux_spec),
-        )
-
-    def step(state, it, t, key, mask, comm):
-        cs = jax.tree.map(lambda a: a[0], comm)  # drop the worker axis
-        state, it, aux, cs = ep(
-            state, it, t, key, worker_weight=mask[0], comm_state=cs
-        )
-        return state, it, aux, jax.tree.map(lambda a: a[None], cs)
-
-    comm_spec = jax.tree.map(lambda _: P(axis), reducer.init_state(task.d, task.m))
     return shard_map_compat(
         step,
         mesh,
-        in_specs=(state_spec, it_spec, P(), P(), P(axis), comm_spec),
-        out_specs=(state_spec, it_spec, aux_spec, comm_spec),
+        in_specs=(carry_spec, P(axis)),
+        out_specs=(carry_spec, aux_spec),
     )
 
 
 # ---------------------------------------------------------------------------
 # Drivers
 # ---------------------------------------------------------------------------
-
-
-def _resolve_max_rank(cfg: DFWConfig) -> int:
-    """Factored-iterate capacity. One factor is appended per epoch and
-    low_rank.fw_update clamps out-of-range writes silently, so undersizing
-    would corrupt the returned iterate — reject it up front."""
-    if cfg.max_rank is None:
-        return cfg.num_epochs
-    if cfg.max_rank < cfg.num_epochs:
-        raise ValueError(
-            f"max_rank={cfg.max_rank} < num_epochs={cfg.num_epochs}: every "
-            "epoch appends one factor, so the iterate store would overflow"
-        )
-    return cfg.max_rank
 
 
 def fit(
@@ -440,6 +437,11 @@ def fit(
     ``num_workers`` count (a mesh over the first N devices is built). The
     sample axis of ``x``/``y`` must divide the worker count. The returned
     history matches ``frank_wolfe.fit``'s, plus the per-epoch worker masks.
+
+    Execution goes through ``core/engine.run_epochs``: maximal constant-K(t)
+    segments each compiled as one ``lax.scan`` inside ``shard_map``, epochs
+    advancing entirely on device. ``callback(start_t, aux_block)`` fires per
+    segment (see ``frank_wolfe.fit``), not per epoch.
     """
     if mesh is None:
         if num_workers is None:
@@ -452,18 +454,13 @@ def fit(
             "make them agree"
         )
     nw = mesh.shape[cfg.data_axis]
-    max_rank = _resolve_max_rank(cfg)
+    max_rank = engine.resolve_max_rank(cfg.max_rank, cfg.num_epochs)
 
-    # "dense" routes through the un-injected legacy epoch (identical code
-    # path, trajectories reproduced exactly); compressed specs build a
-    # reducer sized to this mesh's worker count.
-    reducer = (
-        None
-        if cfg.comm == "dense"
-        else comm_lib.make_reducer(
-            cfg.comm, num_workers=nw,
-            use_pallas=cfg.use_pallas, interpret=cfg.interpret,
-        )
+    # One reducer for every encoding — "dense" is the exact-psum reducer
+    # whose per-worker state is (), keeping the carry structure uniform.
+    reducer = comm_lib.make_reducer(
+        cfg.comm, num_workers=nw,
+        use_pallas=cfg.use_pallas, interpret=cfg.interpret,
     )
 
     ktask = (
@@ -486,22 +483,21 @@ def fit(
     state = ktask.init_state(xs, ys)
     it = low_rank.init(max_rank, task.d, task.m)
 
-    comm_state = None
-    if reducer is not None:
-        # Per-worker reducer state: every worker starts from the reducer's
-        # own init_state values (not zeros — the contract allows nonzero
-        # initialization), stacked along a leading worker axis sharded like
-        # the data rows.
-        comm_state = jax.tree.map(
-            lambda leaf: jax.device_put(
-                jnp.broadcast_to(leaf, (nw,) + leaf.shape),
-                NamedSharding(mesh, P(cfg.data_axis)),
-            ),
-            reducer.init_state(task.d, task.m),
-        )
+    # Per-worker reducer state: every worker starts from the reducer's own
+    # init_state values (not zeros — the contract allows nonzero
+    # initialization), stacked along a leading worker axis sharded like the
+    # data rows. Dense's () has no leaves, so this is a no-op there.
+    comm_example = reducer.init_state(task.d, task.m)
+    comm_state = jax.tree.map(
+        lambda leaf: jax.device_put(
+            jnp.broadcast_to(leaf, (nw,) + leaf.shape),
+            NamedSharding(mesh, P(cfg.data_axis)),
+        ),
+        comm_example,
+    )
 
-    masks = None
-    if cfg.sample_prob < 1.0:
+    sampling = cfg.sample_prob < 1.0
+    if sampling:
         masks = worker_schedule(
             jax.random.fold_in(key, 0x1A5C),
             cfg.num_epochs,
@@ -509,42 +505,52 @@ def fit(
             cfg.sample_prob,
             reweight=cfg.reweight,
         )
-    full = jnp.ones((nw,), jnp.float32)
+    else:
+        masks = jnp.ones((cfg.num_epochs, nw), jnp.float32)
 
-    sched = frank_wolfe.k_schedule(cfg.schedule)
-    compiled: Dict[int, Callable] = {}
-    history: Dict[str, list] = {
-        "loss": [], "gap": [], "sigma": [], "gamma": [], "k": []
-    }
-    for t in range(cfg.num_epochs):
-        k = sched(t)
-        if k not in compiled:
-            compiled[k] = jax.jit(
-                make_sharded_epoch(
-                    ktask, cfg, mesh, k, state_example=state, reducer=reducer
-                )
-            )
-        mask_t = full if masks is None else masks[t]
-        if reducer is None:
-            state, it, aux = compiled[k](state, it, jnp.float32(t), key, mask_t)
-        else:
-            state, it, aux, comm_state = compiled[k](
-                state, it, jnp.float32(t), key, mask_t, comm_state
-            )
-        if callback is not None:
-            callback(t, aux)
-        history["loss"].append(float(aux.loss))
-        history["gap"].append(float(aux.gap))
-        history["sigma"].append(float(aux.sigma))
-        history["gamma"].append(float(aux.gamma))
-        history["k"].append(k)
+    wrapper = engine.shard_map_segment_wrapper(
+        mesh,
+        cfg.data_axis,
+        row_specs(state, cfg.data_axis),
+        comm_state_example=comm_example,
+        has_masks=True,
+    )
+    eres = engine.run_epochs(
+        ktask,
+        state,
+        mu=cfg.mu,
+        num_epochs=cfg.num_epochs,
+        key=key,
+        schedule=cfg.schedule,
+        step_size=cfg.step_size,
+        axis_name=cfg.data_axis,
+        reducer=reducer,
+        comm_state=comm_state,
+        iterate=it,
+        masks=masks,
+        gap_tol=cfg.gap_tol,
+        block_epochs=cfg.block_epochs,
+        segment_wrapper=wrapper,
+        callback=callback,
+        mode=cfg.engine,
+    )
     # Loss at the returned iterate (history is pre-update; see frank_wolfe.fit).
     # The plain sum over the row-sharded state is already the global loss, and
     # straggler weights never apply here: this is the true full-data F.
-    final_loss = float(jax.jit(ktask.local_loss)(state))
+    final_loss = float(
+        jax.device_get(jax.jit(ktask.local_loss)(eres.carry.state))
+    )
+    eres.stats["dispatches"] += 1
+    eres.stats["host_syncs"] += 1
+    eres.stats["compilations"] += 1
     return DFWFitResult(
-        iterate=it, state=state, history=history, masks=masks,
+        iterate=eres.carry.iterate,
+        state=eres.carry.state,
+        history=eres.history,
+        masks=masks[: eres.epochs_run] if sampling else None,
         final_loss=final_loss,
+        epochs_run=eres.epochs_run,
+        stats=eres.stats,
     )
 
 
@@ -564,19 +570,26 @@ def fit_serial(
     ``cfg.comm`` is honored with a one-worker reducer: the serial run
     *simulates* the compressed encoding (int8 at full 127-level budget,
     top-k with one worker's error feedback), which is what the
-    convergence-vs-bits sweeps compare against."""
+    convergence-vs-bits sweeps compare against.
+
+    ``cfg.sample_prob`` < 1 is rejected: the straggler model samples
+    *workers*, and a serial run has exactly one — silently ignoring the
+    setting (the old behavior) made a "straggler" benchmark measure nothing.
+    """
+    if cfg.sample_prob < 1.0:
+        raise ValueError(
+            f"sample_prob={cfg.sample_prob} needs multiple workers to sample "
+            "from; fit_serial runs exactly one. Use fit(..., num_workers=N) "
+            "for the straggler mode, or set sample_prob=1.0"
+        )
     ktask = (
         kernelize(task, use_pallas=cfg.use_pallas, interpret=cfg.interpret)
         if cfg.kernelize
         else task
     )
-    reducer = (
-        None
-        if cfg.comm == "dense"
-        else comm_lib.make_reducer(
-            cfg.comm, num_workers=1,
-            use_pallas=cfg.use_pallas, interpret=cfg.interpret,
-        )
+    reducer = comm_lib.make_reducer(
+        cfg.comm, num_workers=1,
+        use_pallas=cfg.use_pallas, interpret=cfg.interpret,
     )
     res = frank_wolfe.fit(
         ktask,
@@ -588,8 +601,12 @@ def fit_serial(
         step_size=cfg.step_size,
         callback=callback,
         reducer=reducer,
+        max_rank=cfg.max_rank,
+        gap_tol=cfg.gap_tol,
+        block_epochs=cfg.block_epochs,
+        mode=cfg.engine,
     )
     return DFWFitResult(
         iterate=res.iterate, state=res.state, history=res.history, masks=None,
-        final_loss=res.final_loss,
+        final_loss=res.final_loss, epochs_run=res.epochs_run, stats=res.stats,
     )

@@ -279,31 +279,57 @@ def test_sharded_reducers_track_serial_dense():
 
 
 def test_sharded_dense_reducer_bit_exact_vs_legacy_epoch():
-    """The sharded reducer plumbing must be lossless: one epoch built with an
-    injected DenseReducer yields floats identical to the un-injected legacy
-    epoch (comm='dense' itself routes through the latter)."""
+    """The unified-carry reducer plumbing must be lossless: one epoch built
+    with the default DenseReducer yields floats identical to a hand-inlined
+    raw-psum epoch (the pre-engine construction, kept here as the oracle)."""
     out = _run(_SETUP + """
-        from repro import comm as comm_lib
-        from repro.core import low_rank
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map_compat
+        from repro.core import frank_wolfe, low_rank, power_method
+        from repro.core.trace_norm import duality_gap
 
         mesh = dfw.data_mesh(8)
         xs, ys = dfw.shard_rowwise(mesh, (X, Y))
         state = task.init_state(xs, ys)
         it = low_rank.init(base.num_epochs, d, m)
-        t = jnp.float32(0.0)
         k = jax.random.PRNGKey(3)
         mask = jnp.ones((8,), jnp.float32)
 
-        legacy = dfw.make_sharded_epoch(task, base, mesh, 2,
-                                        state_example=state)
+        # hand-inlined raw-psum epoch: exactly the legacy un-injected math
+        def oracle(state, it, kk, mask):
+            w = mask[0]
+            v0 = power_method.sphere_vector(
+                jax.random.fold_in(kk, jnp.int32(0)), m)
+            res = power_method.power_iterations(
+                lambda v: task.matvec(state, v),
+                lambda u: task.rmatvec(state, u),
+                v0, 2, axis_name="data", worker_weight=w)
+            loss = jax.lax.psum(w * task.local_loss(state), "data")
+            inner = jax.lax.psum(w * task.inner_w_grad(state), "data")
+            gap = duality_gap(inner, res.sigma, 1.0)
+            numer, denom = task.linesearch_terms(state, res.u, res.v, 1.0)
+            numer = jax.lax.psum(w * numer, "data")
+            denom = jax.lax.psum(w * denom, "data")
+            gamma = jnp.clip(numer / jnp.maximum(denom, 1e-30), 0.0, 1.0)
+            state = task.update(state, res.u, res.v, gamma, 1.0)
+            it = low_rank.fw_update(it, res.u, res.v, gamma, 1.0)
+            return state, it, frank_wolfe.EpochAux(loss, gap, res.sigma, gamma)
+
+        ss = jax.tree.map(lambda _: P("data"), state)
+        isp = low_rank.FactoredIterate(u=P(), s=P(), v=P(), alpha=P(), count=P())
+        asp = frank_wolfe.EpochAux(P(), P(), P(), P())
+        wrapped = shard_map_compat(oracle, mesh,
+            in_specs=(ss, isp, P(), P("data")), out_specs=(ss, isp, asp))
+        s1, it1, aux1 = jax.jit(wrapped)(state, it, k, mask)
+
         routed = dfw.make_sharded_epoch(task, base, mesh, 2,
-                                        state_example=state,
-                                        reducer=comm_lib.DenseReducer())
-        s1, it1, aux1 = jax.jit(legacy)(state, it, t, k, mask)
-        s2, it2, aux2, cs = jax.jit(routed)(state, it, t, k, mask, ())
-        assert cs == ()
+                                        state_example=state)
+        carry = frank_wolfe.init_carry(state, it, k)
+        carry2, aux2 = jax.jit(routed)(carry, mask)
+        assert carry2.comm_state == ()
+        assert int(carry2.t) == 1
         for a, b in zip(jax.tree.leaves((s1, it1, aux1)),
-                        jax.tree.leaves((s2, it2, aux2))):
+                        jax.tree.leaves((carry2.state, carry2.iterate, aux2))):
             assert np.array_equal(np.asarray(a), np.asarray(b))
         print("dense reducer sharded bit-exact OK")
     """)
@@ -371,22 +397,21 @@ def test_int8_within_2pct_and_3x_fewer_bytes():
         y = jax.ShapeDtypeStruct((n, m), jnp.float32)
         st = tasks.MTLSState(x=x, y=y, r=y)
         it = jax.eval_shape(lambda: low_rank.init(30, d, m))
-        t = jax.ShapeDtypeStruct((), jnp.float32)
-        kk = jax.ShapeDtypeStruct((2,), jnp.uint32)
         msk = jax.ShapeDtypeStruct((8,), jnp.float32)
         bytes_by = {}
         for cm in ("dense", "int8"):
             cfg = dataclasses.replace(base, comm=cm)
-            red = (None if cm == "dense"
-                   else comm_lib.make_reducer(cm, num_workers=8))
+            red = comm_lib.make_reducer(cm, num_workers=8)
             ep = dfw.make_sharded_epoch(task, cfg, mesh, K,
                                         state_example=st, reducer=red)
-            args = [st, it, t, kk, msk]
-            if red is not None:
-                args.append(jax.tree.map(
+            carry = frank_wolfe.EpochCarry(
+                state=st, iterate=it,
+                comm_state=jax.tree.map(
                     lambda l: jax.ShapeDtypeStruct((8,) + l.shape, l.dtype),
-                    red.init_state(d, m)))
-            comp = jax.jit(ep).lower(*args).compile()
+                    red.init_state(d, m)),
+                t=jax.ShapeDtypeStruct((), jnp.int32),
+                key=jax.ShapeDtypeStruct((2,), jnp.uint32))
+            comp = jax.jit(ep).lower(carry, msk).compile()
             bytes_by[cm] = hlo_analysis.analyze(
                 comp.as_text())["collective_bytes_total"]
         ratio = bytes_by["dense"] / bytes_by["int8"]

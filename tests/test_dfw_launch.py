@@ -235,6 +235,23 @@ def test_verify_kernelized_catches_divergence():
         dfw.verify_kernelized(task, Broken(task), s, key)
 
 
+def test_fit_serial_rejects_sample_prob():
+    """Regression: fit_serial used to silently ignore sample_prob < 1 (and
+    reweight), so a 'straggler mode' serial benchmark measured nothing. One
+    worker has nobody to sample — reject loudly."""
+    task = tasks.MultiTaskLeastSquares(d=8, m=6)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 8))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (64, 6))
+    cfg = dfw.DFWConfig(mu=1.0, num_epochs=2, sample_prob=0.5)
+    with pytest.raises(ValueError, match="sample_prob"):
+        dfw.fit_serial(task, x, y, cfg=cfg, key=key)
+    # sample_prob=1.0 (the default) still runs
+    ok = dfw.fit_serial(task, x, y,
+                        cfg=dfw.DFWConfig(mu=1.0, num_epochs=2), key=key)
+    assert ok.epochs_run == 2
+
+
 def test_max_rank_underflow_rejected():
     """One factor is appended per epoch; an undersized iterate store would be
     silently corrupted by fw_update's clamped writes, so fit() rejects it."""

@@ -42,15 +42,12 @@ def test_sharded_dfw_trace_equals_serial():
 
         mesh = jax.make_mesh((8,), ("data",))
         ss = tasks.MTLSState(x=P("data"), y=P("data"), r=P("data"))
-        isp = low_rank.FactoredIterate(u=P(), s=P(), v=P(), alpha=P(), count=P())
-        asp = frank_wolfe.EpochAux(P(), P(), P(), P())
-        from repro.compat import shard_map_compat
-        wrap = lambda f: shard_map_compat(f, mesh, in_specs=(ss, isp, P(), P()),
-                                          out_specs=(ss, isp, asp))
+        from repro.core import engine
+        wrap = engine.shard_map_segment_wrapper(mesh, "data", ss)
         dist = frank_wolfe.fit(task, task.init_state(X, Y), mu=1.0, num_epochs=8,
                                key=jax.random.PRNGKey(1), schedule="const:2",
                                step_size="linesearch", axis_name="data",
-                               epoch_wrapper=wrap)
+                               segment_wrapper=wrap)
         np.testing.assert_allclose(serial.history["loss"], dist.history["loss"], rtol=1e-4)
         W1 = low_rank.materialize(serial.iterate); W2 = low_rank.materialize(dist.iterate)
         assert float(jnp.max(jnp.abs(W1 - W2))) < 1e-5
@@ -142,23 +139,28 @@ def test_straggler_dropout_still_converges():
         ss = tasks.MTLSState(x=P("data"), y=P("data"), r=P("data"))
         isp = low_rank.FactoredIterate(u=P(), s=P(), v=P(), alpha=P(), count=P())
         asp = frank_wolfe.EpochAux(P(), P(), P(), P())
+        csp = frank_wolfe.EpochCarry(state=ss, iterate=isp, comm_state=(),
+                                     t=P(), key=P())
+
+        # one random straggler dropped per epoch (BSP timeout simulation),
+        # driven through the unified-carry epoch contract directly
+        ep = frank_wolfe.make_epoch_step(task, 1.0, 2,
+            step_size="linesearch", axis_name="data")
+        def step(carry, mask):
+            return ep(carry, worker_weight=mask[0])
+        wrap = jax.jit(shard_map_compat(step, mesh,
+            in_specs=(csp, P("data")), out_specs=(csp, asp)))
 
         losses = []
-        state = task.init_state(X, Y)
-        it = low_rank.init(30, d, m)
+        carry = frank_wolfe.init_carry(task.init_state(X, Y),
+                                       low_rank.init(30, d, m),
+                                       jax.random.PRNGKey(1))
         for t in range(30):
-            # one random straggler dropped per epoch (BSP timeout simulation)
             drop = int(jax.random.randint(jax.random.fold_in(key, 100+t), (), 0, 8))
-            def step(st, itr, tt, kk, mask):
-                ep = frank_wolfe.make_epoch_step(task, 1.0, 2,
-                    step_size="linesearch", axis_name="data")
-                return ep(st, itr, tt, kk, worker_weight=mask[0])
-            wrap = shard_map_compat(step, mesh,
-                in_specs=(ss, isp, P(), P(), P("data")),
-                out_specs=(ss, isp, asp))
             mask = jnp.ones((8,)).at[drop].set(0.0)
-            state, it, aux = wrap(state, it, jnp.float32(t), jax.random.PRNGKey(1), mask)
+            carry, aux = wrap(carry, mask)
             losses.append(float(aux.loss))
+        assert int(carry.t) == 30
         assert losses[-1] < 0.15 * losses[0], losses[-1] / losses[0]
         print("straggler-robust convergence OK", losses[0], losses[-1])
     """)

@@ -1,0 +1,390 @@
+"""Device-resident epoch engine (core/engine.py).
+
+Covers the segment plan, scan-vs-legacy trajectory equivalence, gap-based
+early stopping, the dispatch/host-sync regression pins, and the segment
+granularity of the progress callback. Multi-device coverage runs in
+subprocesses with 8 fake CPU devices (the device count locks at the first
+jax init in the main pytest process), matching tests/test_dfw_launch.py.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import comm
+from repro.core import engine, frank_wolfe, tasks
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def _run(script: str, timeout=900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr[-4000:]}"
+    return res.stdout
+
+
+# ---------------------------------------------------------------------------
+# Segment plan
+# ---------------------------------------------------------------------------
+
+
+def test_plan_segments_const_is_one_segment():
+    (seg,) = engine.plan_segments("const:2", 30)
+    assert seg == engine.Segment(start=0, length=30, k=2)
+
+
+def test_plan_segments_log_is_maximal_constant_runs():
+    segs = engine.plan_segments("log", 50)
+    sched = frank_wolfe.k_schedule("log")
+    # contiguous, exhaustive, constant-K inside, maximal at the boundaries
+    t = 0
+    for seg in segs:
+        assert seg.start == t
+        for e in range(seg.start, seg.start + seg.length):
+            assert sched(e) == seg.k
+        t = seg.start + seg.length
+    assert t == 50
+    for a, b in zip(segs, segs[1:]):
+        assert a.k != b.k  # maximality: adjacent segments differ in K
+    assert len(segs) <= int(np.log(50)) + 2  # O(log T) dispatches
+
+
+def test_plan_segments_block_epochs_caps_length():
+    segs = engine.plan_segments("const:1", 25, block_epochs=10)
+    assert [s.length for s in segs] == [10, 10, 5]
+    assert all(s.k == 1 for s in segs)
+    with pytest.raises(ValueError, match="block_epochs"):
+        engine.plan_segments("const:1", 5, block_epochs=0)
+    with pytest.raises(ValueError, match="num_epochs"):
+        engine.plan_segments("const:1", 0)
+
+
+def test_resolve_max_rank_contract():
+    assert engine.resolve_max_rank(None, 7) == 7
+    assert engine.resolve_max_rank(12, 7) == 12
+    with pytest.raises(ValueError, match="max_rank"):
+        engine.resolve_max_rank(6, 7)
+
+
+# ---------------------------------------------------------------------------
+# Scan-vs-legacy trajectory equivalence (serial; the 8-way variant is below)
+# ---------------------------------------------------------------------------
+
+
+def _mtls(key, n=400, d=24, m=18):
+    kx, kw = jax.random.split(key)
+    w = jax.random.normal(kw, (d, m))
+    w = w / jnp.linalg.norm(w, ord="nuc")
+    x = jax.random.normal(kx, (n, d))
+    return x, x @ w
+
+
+def _fit_pair(task, state_fn, *, reducer=None, schedule="const:2",
+              step_size="linesearch", num_epochs=10, gap_tol=None):
+    out = {}
+    for mode in ("scan", "legacy"):
+        out[mode] = frank_wolfe.fit(
+            task, state_fn(), mu=1.0, num_epochs=num_epochs,
+            key=jax.random.PRNGKey(1), schedule=schedule, step_size=step_size,
+            reducer=reducer, gap_tol=gap_tol, mode=mode,
+        )
+    return out["scan"], out["legacy"]
+
+
+def _assert_traj_match(a, b):
+    assert a.history["k"] == b.history["k"]
+    for key in ("loss", "gap", "sigma", "gamma"):
+        np.testing.assert_allclose(a.history[key], b.history[key],
+                                   rtol=1e-5, atol=1e-6, err_msg=key)
+    np.testing.assert_allclose(a.final_loss, b.final_loss, rtol=1e-5)
+
+
+@pytest.mark.parametrize("schedule", ["const:2", "log"])
+def test_scan_equals_legacy_mtls(schedule):
+    x, y = _mtls(jax.random.PRNGKey(0))
+    task = tasks.MultiTaskLeastSquares(d=24, m=18)
+    s, l = _fit_pair(task, lambda: task.init_state(x, y), schedule=schedule)
+    _assert_traj_match(s, l)
+
+
+def test_scan_equals_legacy_logistic_int8():
+    """Logistic task + int8 reducer: the stochastic-rounding noise streams
+    are keyed by the carried epoch counter, so scan and legacy draw the
+    identical noise and the trajectories match."""
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (300, 20))
+    yl = jax.random.randint(jax.random.fold_in(key, 1), (300,), 0, 12)
+    task = tasks.MultinomialLogistic(d=20, m=12)
+    s, l = _fit_pair(task, lambda: task.init_state(x, yl),
+                     reducer=comm.Int8Reducer(num_workers=1),
+                     step_size="default")
+    _assert_traj_match(s, l)
+
+
+def test_scan_equals_legacy_matrix_completion():
+    key = jax.random.PRNGKey(3)
+    d, m, rank = 32, 24, 4
+    ku, kv, ko = jax.random.split(key, 3)
+    u = jnp.linalg.qr(jax.random.normal(ku, (d, rank)))[0]
+    v = jnp.linalg.qr(jax.random.normal(kv, (m, rank)))[0]
+    w = (u * (jnp.linspace(1.0, 0.3, rank) / rank)) @ v.T
+    mask = jax.random.bernoulli(ko, 0.4, (d, m))
+    rows, cols = jnp.nonzero(mask)
+    idx, yw = tasks.pack_observations(rows, cols, w[rows, cols])
+    task = tasks.MatrixCompletion(d=d, m=m)
+    s, l = _fit_pair(task, lambda: task.init_state(idx, yw))
+    _assert_traj_match(s, l)
+
+
+def test_scan_equals_legacy_with_topk_comm_state():
+    """Stateful reducer: the error-feedback residuals thread through the
+    scan carry exactly as through the per-epoch loop."""
+    x, y = _mtls(jax.random.PRNGKey(4))
+    task = tasks.MultiTaskLeastSquares(d=24, m=18)
+    s, l = _fit_pair(task, lambda: task.init_state(x, y),
+                     reducer=comm.TopKReducer(k=6))
+    _assert_traj_match(s, l)
+
+
+# ---------------------------------------------------------------------------
+# Gap-certificate early stopping
+# ---------------------------------------------------------------------------
+
+
+def test_early_stop_truncates_consistently():
+    x, y = _mtls(jax.random.PRNGKey(5))
+    task = tasks.MultiTaskLeastSquares(d=24, m=18)
+    full = frank_wolfe.fit(task, task.init_state(x, y), mu=1.0, num_epochs=40,
+                           key=jax.random.PRNGKey(1), step_size="linesearch")
+    tol = float(full.history["gap"][0]) * 0.4  # loose: fires mid-run
+    s, l = _fit_pair(task, lambda: task.init_state(x, y), num_epochs=40,
+                     gap_tol=tol)
+    assert 0 < s.epochs_run < 40
+    assert s.epochs_run == l.epochs_run  # scan and legacy stop identically
+    for key in ("loss", "gap", "sigma", "gamma", "k"):
+        assert len(s.history[key]) == s.epochs_run, key
+        assert np.all(np.isfinite(np.asarray(s.history[key], np.float64))), key
+    # the stopping epoch is certified; everything before it is not
+    assert s.history["gap"][-1] <= tol
+    assert all(g > tol for g in s.history["gap"][:-1])
+    # the prefix matches the untruncated run
+    np.testing.assert_allclose(s.history["loss"],
+                               full.history["loss"][: s.epochs_run], rtol=1e-5)
+
+
+def test_early_stop_block_epochs_bounds_overshoot():
+    """block_epochs caps how far a converged run can scan past its
+    certificate: with blocks of 5, at most 4 no-op epochs trail the stop."""
+    x, y = _mtls(jax.random.PRNGKey(6))
+    task = tasks.MultiTaskLeastSquares(d=24, m=18)
+    full = frank_wolfe.fit(task, task.init_state(x, y), mu=1.0, num_epochs=40,
+                           key=jax.random.PRNGKey(1), step_size="linesearch")
+    tol = float(full.history["gap"][0]) * 0.4
+    res = frank_wolfe.fit(task, task.init_state(x, y), mu=1.0, num_epochs=40,
+                          key=jax.random.PRNGKey(1), step_size="linesearch",
+                          gap_tol=tol, block_epochs=5)
+    assert res.epochs_run < 40
+    # the engine never launched segments past the one that converged
+    assert res.stats["segments_run"] <= -(-res.epochs_run // 5)
+
+
+def test_gap_tol_none_runs_everything():
+    x, y = _mtls(jax.random.PRNGKey(7))
+    task = tasks.MultiTaskLeastSquares(d=24, m=18)
+    res = frank_wolfe.fit(task, task.init_state(x, y), mu=1.0, num_epochs=12,
+                          key=jax.random.PRNGKey(1))
+    assert res.epochs_run == 12
+    assert len(res.history["loss"]) == 12
+
+
+# ---------------------------------------------------------------------------
+# Dispatch / host-sync regression pins (the engine's reason to exist)
+# ---------------------------------------------------------------------------
+
+
+def test_serial_const2_is_two_dispatches_o1_syncs():
+    """A 30-epoch const:2 run is one scan dispatch (+ one final-loss eval):
+    <= 2 executables, <= 2 dispatches, O(1) explicit device->host transfers,
+    and — enforced by the transfer guard — zero implicit per-epoch pulls."""
+    x, y = _mtls(jax.random.PRNGKey(8))
+    task = tasks.MultiTaskLeastSquares(d=24, m=18)
+    state = task.init_state(x, y)
+    with jax.transfer_guard_device_to_host("disallow"):
+        res = frank_wolfe.fit(task, state, mu=1.0, num_epochs=30,
+                              key=jax.random.PRNGKey(1),
+                              step_size="linesearch")
+    assert res.epochs_run == 30
+    assert res.stats["dispatches"] <= 2, res.stats
+    assert res.stats["compilations"] <= 2, res.stats
+    assert res.stats["host_syncs"] <= 2, res.stats
+    # legacy mode, by contrast, pays per-epoch dispatches and 4 pulls/epoch
+    legacy = frank_wolfe.fit(task, task.init_state(x, y), mu=1.0,
+                             num_epochs=30, key=jax.random.PRNGKey(1),
+                             step_size="linesearch", mode="legacy")
+    assert legacy.stats["dispatches"] == 31
+    assert legacy.stats["host_syncs"] >= 4 * 30
+
+
+def test_log_schedule_is_olog_dispatches():
+    x, y = _mtls(jax.random.PRNGKey(9))
+    task = tasks.MultiTaskLeastSquares(d=24, m=18)
+    with jax.transfer_guard_device_to_host("disallow"):
+        res = frank_wolfe.fit(task, task.init_state(x, y), mu=1.0,
+                              num_epochs=30, key=jax.random.PRNGKey(1),
+                              schedule="log", step_size="linesearch")
+    n_segments = len(engine.plan_segments("log", 30))
+    assert res.stats["dispatches"] == n_segments + 1
+    assert res.stats["host_syncs"] <= 2
+
+
+def test_sharded8_const2_is_two_dispatches_o1_syncs():
+    """The 8-way pin of the acceptance bar, under the same transfer guard."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import tasks
+        from repro.launch import dfw
+
+        n, d, m = 1600, 40, 30
+        key = jax.random.PRNGKey(0)
+        kx, kw = jax.random.split(key)
+        W = jax.random.normal(kw, (d, m)); W = W / jnp.linalg.norm(W, ord="nuc")
+        X = jax.random.normal(kx, (n, d)); Y = X @ W
+        task = tasks.MultiTaskLeastSquares(d=d, m=m)
+        cfg = dfw.DFWConfig(mu=1.0, num_epochs=30, schedule="const:2",
+                            step_size="linesearch")
+        with jax.transfer_guard_device_to_host("disallow"):
+            res = dfw.fit(task, X, Y, cfg=cfg, key=jax.random.PRNGKey(1),
+                          num_workers=8)
+        assert res.epochs_run == 30
+        assert res.stats["dispatches"] <= 2, res.stats
+        assert res.stats["compilations"] <= 2, res.stats
+        assert res.stats["host_syncs"] <= 2, res.stats
+        assert res.history["loss"][-1] < 0.2 * res.history["loss"][0]
+        print("sharded 30-epoch const:2 stats OK", res.stats)
+    """)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Callback granularity: per segment, not per epoch
+# ---------------------------------------------------------------------------
+
+
+def test_callback_fires_per_segment_with_host_blocks():
+    x, y = _mtls(jax.random.PRNGKey(10))
+    task = tasks.MultiTaskLeastSquares(d=24, m=18)
+    calls = []
+    res = frank_wolfe.fit(
+        task, task.init_state(x, y), mu=1.0, num_epochs=20,
+        key=jax.random.PRNGKey(1), step_size="linesearch", block_epochs=8,
+        callback=lambda start, aux: calls.append((start, len(aux.loss),
+                                                  np.asarray(aux.loss))),
+    )
+    assert [(s, n) for s, n, _ in calls] == [(0, 8), (8, 8), (16, 4)]
+    # the blocks are the history, in order
+    np.testing.assert_allclose(np.concatenate([b for _, _, b in calls]),
+                               res.history["loss"], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# 8-way scan-vs-legacy equivalence: three tasks, dense + int8, stragglers on
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow  # subprocess + 12 fits: the full equivalence matrix
+def test_sharded8_scan_equals_legacy_all_tasks():
+    out = _run("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import tasks
+        from repro.launch import dfw
+
+        def check(task, x, y, cfg, tag):
+            runs = {}
+            for mode in ("scan", "legacy"):
+                runs[mode] = dfw.fit(
+                    task, x, y, cfg=dataclasses.replace(cfg, engine=mode),
+                    key=jax.random.PRNGKey(1), num_workers=8)
+            s, l = runs["scan"], runs["legacy"]
+            assert s.history["k"] == l.history["k"], tag
+            for k in ("loss", "gap", "sigma", "gamma"):
+                np.testing.assert_allclose(s.history[k], l.history[k],
+                                           rtol=1e-5, atol=1e-6,
+                                           err_msg=f"{tag}:{k}")
+            np.testing.assert_allclose(s.final_loss, l.final_loss, rtol=1e-5)
+            if s.masks is not None:
+                np.testing.assert_allclose(np.asarray(s.masks),
+                                           np.asarray(l.masks))
+            print(tag, "OK")
+
+        n, d, m = 1600, 40, 30
+        key = jax.random.PRNGKey(0)
+        kx, kw = jax.random.split(key)
+        W = jax.random.normal(kw, (d, m)); W = W / jnp.linalg.norm(W, ord="nuc")
+        X = jax.random.normal(kx, (n, d)); Y = X @ W
+        yl = jnp.argmax(X @ W, axis=1)
+
+        # straggler sampling ON for the whole matrix: masks are indexed
+        # inside the scan, so this exercises the (num_epochs, nw) path
+        base = dfw.DFWConfig(mu=1.0, num_epochs=8, schedule="const:2",
+                             step_size="linesearch", sample_prob=0.7)
+        mtls = tasks.MultiTaskLeastSquares(d=d, m=m)
+        for comm in ("dense", "int8"):
+            check(mtls, X, Y, dataclasses.replace(base, comm=comm),
+                  f"mtls/{comm}")
+
+        logi = tasks.MultinomialLogistic(d=d, m=m)
+        lcfg = dfw.DFWConfig(mu=10.0, num_epochs=8, schedule="log",
+                             sample_prob=0.7)
+        for comm in ("dense", "int8"):
+            check(logi, X, yl, dataclasses.replace(lcfg, comm=comm),
+                  f"logistic/{comm}")
+
+        d2, m2, rank = 64, 48, 5
+        ku, kv, ko = jax.random.split(jax.random.PRNGKey(7), 3)
+        U = jnp.linalg.qr(jax.random.normal(ku, (d2, rank)))[0]
+        V = jnp.linalg.qr(jax.random.normal(kv, (m2, rank)))[0]
+        sv = jnp.linspace(1.0, 0.2, rank); sv = sv / jnp.sum(sv)
+        Wmc = (U * sv) @ V.T
+        msk = jax.random.bernoulli(ko, 0.35, (d2, m2))
+        rows, cols = jnp.nonzero(msk)
+        idx8, yw8 = dfw.shard_observations(rows, cols, Wmc[rows, cols], 8,
+                                           d2, m=m2)
+        mc = tasks.MatrixCompletion(d=d2, m=m2)
+        mcfg = dfw.DFWConfig(mu=1.5, num_epochs=8, schedule="const:2",
+                             step_size="linesearch", sample_prob=0.7)
+        for comm in ("dense", "int8"):
+            check(mc, idx8, yw8, dataclasses.replace(mcfg, comm=comm),
+                  f"mc/{comm}")
+
+        # early stop agrees across modes in the sharded driver too
+        ecfg = dfw.DFWConfig(mu=1.0, num_epochs=40, schedule="const:2",
+                             step_size="linesearch")
+        probe = dfw.fit(mtls, X, Y, cfg=ecfg, key=jax.random.PRNGKey(1),
+                        num_workers=8)
+        tol = float(probe.history["gap"][0]) * 0.4
+        ecfg = dataclasses.replace(ecfg, gap_tol=tol)
+        es = dfw.fit(mtls, X, Y, cfg=ecfg, key=jax.random.PRNGKey(1),
+                     num_workers=8)
+        el = dfw.fit(mtls, X, Y,
+                     cfg=dataclasses.replace(ecfg, engine="legacy"),
+                     key=jax.random.PRNGKey(1), num_workers=8)
+        assert 0 < es.epochs_run < 40
+        assert es.epochs_run == el.epochs_run
+        assert len(es.history["loss"]) == es.epochs_run
+        print("early-stop sharded OK", es.epochs_run)
+        print("equivalence matrix OK")
+    """, timeout=1200)
+    assert "equivalence matrix OK" in out

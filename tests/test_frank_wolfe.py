@@ -127,6 +127,31 @@ def test_fit_final_loss_is_returned_iterate_loss():
     assert res.final_loss < res.history["loss"][-1]
 
 
+def test_fit_max_rank_capacity_contract():
+    """Regression: ``fit`` used to hardcode ``low_rank.init(num_epochs, ...)``
+    with no way to preallocate extra capacity, and an undersized store would
+    be silently corrupted by fw_update's clamped writes. ``max_rank=`` now
+    follows the same validated contract as ``launch/dfw.DFWConfig``."""
+    x, y, _ = _mtls_problem(jax.random.PRNGKey(30), n=200, d=12, m=10)
+    task = tasks.MultiTaskLeastSquares(d=12, m=10)
+    with pytest.raises(ValueError, match="max_rank"):
+        fit(task, task.init_state(x, y), mu=1.0, num_epochs=5,
+            key=jax.random.PRNGKey(31), max_rank=3)
+    res = fit(task, task.init_state(x, y), mu=1.0, num_epochs=5,
+              key=jax.random.PRNGKey(31), max_rank=9)
+    assert res.iterate.u.shape == (9, 12)  # requested capacity, not epochs
+    assert int(res.iterate.count) == 5
+    # extra capacity changes storage only, never the trajectory
+    default = fit(task, task.init_state(x, y), mu=1.0, num_epochs=5,
+                  key=jax.random.PRNGKey(31))
+    np.testing.assert_allclose(res.history["loss"], default.history["loss"],
+                               rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(low_rank.materialize(res.iterate)),
+        np.asarray(low_rank.materialize(default.iterate)),
+        rtol=1e-6, atol=1e-7)
+
+
 def _mtls_problem(key, n=1500, d=40, m=30, rank=5):
     ku, kv, kx = jax.random.split(key, 3)
     u = jnp.linalg.qr(jax.random.normal(ku, (d, rank)))[0]
