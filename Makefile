@@ -2,7 +2,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-smoke lint
+.PHONY: test test-fast bench-smoke bench-check lint
 
 # Tier-1 verify (see ROADMAP.md): full pytest suite, stop at first failure.
 test:
@@ -14,8 +14,14 @@ test-fast:
 	$(PYTHON) -m pytest -x -q -m "not slow"
 
 # Fast pass over the paper-figure benchmark suites (small problem sizes).
+# Writes the machine-readable perf record BENCH_smoke.json at the repo root;
+# CI uploads it as an artifact and gates on benchmarks/check_regression.py.
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --fast
+	$(PYTHON) -m benchmarks.run --fast --json BENCH_smoke.json
+
+# Compare the smoke record against the checked-in baselines (the CI gate).
+bench-check:
+	$(PYTHON) -m benchmarks.check_regression BENCH_smoke.json
 
 # Syntax sweep; uses ruff/flake8 when available, byte-compilation otherwise.
 lint:

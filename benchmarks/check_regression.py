@@ -1,0 +1,106 @@
+"""CI perf-regression gate over the machine-readable benchmark output.
+
+Compares a ``BENCH_*.json`` (written by ``benchmarks/run.py --json``)
+against the checked-in ``benchmarks/baselines.json``::
+
+    python -m benchmarks.check_regression BENCH_smoke.json
+
+Baselines schema — one entry per guarded metric::
+
+    {
+      "factor": 2.0,                       # default allowed ratio
+      "metrics": {
+        "engine_overhead/engine.serial.scan": {
+          "metric": "epochs_per_sec",      # derived key ("us_per_call" = timing)
+          "baseline": 3800.0,
+          "direction": "higher",           # "higher" or "lower" is better
+          "factor": 2.0                    # optional per-metric override
+        }
+      }
+    }
+
+A "higher"-is-better metric regresses when ``measured < baseline /
+factor``; "lower" when ``measured > baseline * factor``. The factor is
+deliberately generous (2x by default): CI runs on shared CPU runners whose
+absolute throughput wobbles, and this gate exists to catch the engine
+falling off a cliff (a reintroduced per-epoch host sync is ~7x on the
+serial scan path), not 10% noise. A guarded metric that is *missing* from
+the measurement — suite failed, record renamed — is itself a failure:
+silence must not pass the gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINES = Path(__file__).resolve().parent / "baselines.json"
+
+
+def load_records(bench_path: str):
+    payload = json.loads(Path(bench_path).read_text())
+    index = {}
+    for rec in payload.get("records", []):
+        index[f"{rec.get('suite')}/{rec.get('name')}"] = rec
+    return payload.get("meta", {}), index
+
+
+def check(bench_path: str, baselines_path: str) -> list:
+    """Returns a list of failure strings (empty = gate passes)."""
+    base = json.loads(Path(baselines_path).read_text())
+    default_factor = float(base.get("factor", 2.0))
+    meta, records = load_records(bench_path)
+    failures = []
+    for key, spec in base.get("metrics", {}).items():
+        rec = records.get(key)
+        if rec is None:
+            failures.append(f"{key}: no record in {bench_path} (suite failed?)")
+            continue
+        metric = spec.get("metric", "us_per_call")
+        value = (
+            rec.get("us_per_call")
+            if metric == "us_per_call"
+            else rec.get("derived", {}).get(metric)
+        )
+        if not isinstance(value, (int, float)):
+            failures.append(
+                f"{key}: derived metric {metric!r} missing or non-numeric "
+                f"(got {value!r})"
+            )
+            continue
+        baseline = float(spec["baseline"])
+        factor = float(spec.get("factor", default_factor))
+        direction = spec.get("direction", "higher")
+        if direction == "higher":
+            ok, bound = value >= baseline / factor, baseline / factor
+            cmp = f"{value:.3g} < allowed minimum {bound:.3g}"
+        elif direction == "lower":
+            ok, bound = value <= baseline * factor, baseline * factor
+            cmp = f"{value:.3g} > allowed maximum {bound:.3g}"
+        else:
+            failures.append(f"{key}: bad direction {direction!r}")
+            continue
+        status = "ok" if ok else "REGRESSION"
+        print(
+            f"{status:>10}  {key} {metric}={value:.4g} "
+            f"(baseline {baseline:.4g}, {direction} is better, {factor}x slack)"
+        )
+        if not ok:
+            failures.append(f"{key}: {metric} {cmp} ({factor}x vs {baseline:.4g})")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench_json", help="BENCH_*.json from benchmarks.run --json")
+    ap.add_argument("--baselines", default=str(DEFAULT_BASELINES))
+    args = ap.parse_args()
+    failures = check(args.bench_json, args.baselines)
+    if failures:
+        sys.exit("perf regression gate FAILED:\n  " + "\n  ".join(failures))
+    print("perf regression gate passed")
+
+
+if __name__ == "__main__":
+    main()

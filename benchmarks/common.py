@@ -1,19 +1,89 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.
+
+Every ``emit`` both prints the legacy ``name,us_per_call,derived`` CSV line
+and appends a structured record (suite, name, timing, parsed derived
+metrics) to ``RECORDS``; ``benchmarks/run.py --json PATH`` dumps them with
+environment metadata so the perf trajectory is machine-readable —
+``benchmarks/check_regression.py`` consumes exactly this format in CI.
+"""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, Dict, List
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 ROWS: List[str] = []
+RECORDS: List[Dict[str, Any]] = []
+_SUITE: List[Optional[str]] = [None]
+
+
+def begin_suite(name: Optional[str]) -> None:
+    """Tag subsequent ``emit`` records with the suite that produced them
+    (run.py calls this as it enters each suite)."""
+    _SUITE[0] = name
+
+
+def parse_derived(derived: str) -> Dict[str, Any]:
+    """``"a=3.5;b=2x;c=foo"`` -> ``{"a": 3.5, "b": 2.0, "c": "foo"}`` — the
+    loose key=value convention the suites already print, parsed so JSON
+    consumers get numbers, not strings (a trailing ``x`` on speedup ratios
+    is stripped)."""
+    out: Dict[str, Any] = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        k, v = k.strip(), v.strip()
+        val: Any = v
+        for candidate in (v, v[:-1] if v.endswith("x") else None):
+            if candidate is None:
+                continue
+            try:
+                val = float(candidate)
+                break
+            except ValueError:
+                pass
+        out[k] = val
+    return out
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
+    RECORDS.append(
+        {
+            "suite": _SUITE[0],
+            "name": name,
+            "us_per_call": float(us_per_call),
+            "derived": parse_derived(derived),
+        }
+    )
     print(row, flush=True)
+
+
+def environment() -> Dict[str, Any]:
+    """The reproducibility stamp written into every JSON dump: enough to
+    tell two BENCH files apart before comparing their numbers."""
+    dev = jax.devices()[0]
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "device_count": jax.device_count(),
+        "timestamp_unix": time.time(),
+    }
+
+
+def write_json(path: str) -> None:
+    """Dump all records collected so far as ``{"meta": ..., "records":
+    [...]}`` — the schema ``benchmarks/check_regression.py`` reads."""
+    payload = {"meta": environment(), "records": RECORDS}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {len(RECORDS)} records to {path}", flush=True)
 
 
 def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

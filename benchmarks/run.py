@@ -1,4 +1,7 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV; ``--json PATH`` additionally dumps every row as a structured record
+# (suite, parsed derived metrics, jax/device metadata) for the perf
+# trajectory and the CI regression gate (benchmarks/check_regression.py).
 from __future__ import annotations
 
 import argparse
@@ -10,6 +13,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run a single benchmark module")
     ap.add_argument("--fast", action="store_true", help="smaller sizes")
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="write structured records (BENCH_<name>.json) besides the CSV",
+    )
     args = ap.parse_args()
 
     from . import (
@@ -51,16 +58,25 @@ def main() -> None:
     if args.only:
         suites = {args.only: suites[args.only]}
 
+    from . import common
+
     print("name,us_per_call,derived")
     failures = []
     for name, fn in suites.items():
         print(f"# === {name} ===", flush=True)
+        common.begin_suite(name)
         try:
             fn()
         except Exception as e:  # noqa: BLE001
             failures.append(name)
             traceback.print_exc()
-            print(f"{name},0.0,FAILED({type(e).__name__}:{e})")
+            # Through emit, not print: a failed suite must show up in the
+            # JSON dump too, or the regression gate would read its absence
+            # as "nothing to check" instead of "broken".
+            common.emit(name, 0.0, f"FAILED({type(e).__name__}:{e})")
+    common.begin_suite(None)
+    if args.json:
+        common.write_json(args.json)
     if failures:
         sys.exit(f"benchmark suites failed: {failures}")
 

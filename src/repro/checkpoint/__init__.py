@@ -1,3 +1,20 @@
-from .store import CheckpointStore
+from . import dfw
+from .dfw import (
+    RunCheckpointer,
+    RunSnapshot,
+    read_run_extra,
+    restore_run,
+    run_extra,
+)
+from .store import MANIFEST_FORMAT, CheckpointStore
 
-__all__ = ["CheckpointStore"]
+__all__ = [
+    "CheckpointStore",
+    "MANIFEST_FORMAT",
+    "RunCheckpointer",
+    "RunSnapshot",
+    "dfw",
+    "read_run_extra",
+    "restore_run",
+    "run_extra",
+]

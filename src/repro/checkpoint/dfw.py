@@ -1,0 +1,279 @@
+"""DFW-Trace run checkpointing: what a run checkpoint *is* and how to resume.
+
+``checkpoint/store.py`` is payload-agnostic (any pytree, async sharded
+writes, atomic manifests). This module fixes the payload schema for a
+DFW-Trace run and implements the two resume contracts the drivers expose:
+
+* **Bit-exact resume** — same mesh, same comm mode: the restored
+  ``EpochCarry`` (task sufficient-information state, factored iterate,
+  reducer/error-feedback state, epoch counter ``t``, run PRNG key) plus the
+  saved straggler-mask schedule reproduce the uninterrupted trajectory
+  bit-for-bit. Everything the epoch scan reads is in the payload; nothing is
+  re-derived.
+* **Elastic resume** — different worker count: the payload stores LOGICAL
+  (global) arrays, so the task state re-shards row-wise onto the new mesh,
+  per-worker reducer state is re-initialized (residuals are per-worker and
+  cannot follow a repartition), and the mask schedule is re-drawn for the
+  new worker count. Exactness is not preserved (summation order changes);
+  convergence is.
+
+Payload schema (one checkpoint step = one segment boundary, step id = t)::
+
+    {
+      "carry":   EpochCarry(state, iterate_packed, comm_state, t, key),
+      "history": {"loss","gap","sigma","gamma","k"} arrays of length t,
+      "masks":   (num_epochs, nw) straggler weights, or (0, 0) when unused,
+    }
+
+``iterate_packed`` is the factored iterate trimmed to its live-rank prefix
+(``low_rank.pack_live``): a t-epoch checkpoint stores t factors, not the
+full ``max_rank`` capacity — restore re-pads to any capacity bit-exactly
+(rows past ``count`` are zeros by construction). The manifest ``extra``
+records the run configuration (task/d/m/comm/num_workers/schedule/...) so
+``restore_run`` can rebuild structure skeletons and drivers can decide
+between the bit-exact and elastic paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Any, Dict, Optional, Union
+
+import numpy as np
+
+from ..core import low_rank
+from ..core.frank_wolfe import EpochCarry
+from .store import CheckpointStore
+
+PyTree = Any
+
+PAYLOAD_FORMAT = 1
+HISTORY_KEYS = ("loss", "gap", "sigma", "gamma", "k")
+
+# Manifest-extra fields restore_run hard-indexes to rebuild structure
+# skeletons; a checkpoint written without them could never be restored, so
+# RunCheckpointer refuses to be built without them (fail at save setup, not
+# days later at restore).
+REQUIRED_EXTRA = ("task", "d", "m", "num_workers", "comm")
+
+
+def _history_arrays(history: Dict[str, list]) -> Dict[str, np.ndarray]:
+    out = {}
+    for k in HISTORY_KEYS:
+        vals = history.get(k, [])
+        dtype = np.int32 if k == "k" else np.float64
+        out[k] = np.asarray(vals, dtype)
+    return out
+
+
+def _history_lists(arrays: Dict[str, np.ndarray]) -> Dict[str, list]:
+    return {
+        k: [int(v) for v in arrays[k]] if k == "k" else [float(v) for v in arrays[k]]
+        for k in HISTORY_KEYS
+    }
+
+
+class RunCheckpointer:
+    """Engine-facing checkpoint policy: *when* to save and *what* payload.
+
+    The engine calls ``want(boundary_index, last)`` at every segment
+    boundary and, when it answers True, hands over the host-fetched carry,
+    history-so-far, and mask schedule via ``save_segment`` — which packs the
+    iterate to its live prefix and issues one ``CheckpointStore.save_async``
+    (the write itself never blocks the next segment's dispatch).
+
+    ``extra`` is the run-configuration record stamped into every manifest;
+    drivers fill it via ``run_extra``. ``save_every`` saves every Nth
+    boundary (the final/early-stop boundary is always saved).
+    """
+
+    def __init__(
+        self,
+        store: Union[CheckpointStore, str, Path],
+        *,
+        save_every: int = 1,
+        keep_last: Optional[int] = 2,
+        extra: Optional[Dict] = None,
+    ):
+        if save_every < 1:
+            raise ValueError(f"save_every={save_every}: must be >= 1")
+        if isinstance(store, (str, Path)):
+            store = CheckpointStore(store, keep_last=keep_last)
+        self.store = store
+        self.save_every = save_every
+        self.extra = dict(extra or {})
+        missing = [k for k in REQUIRED_EXTRA if k not in self.extra]
+        if missing:
+            raise ValueError(
+                f"RunCheckpointer extra is missing {missing}: restore_run "
+                "needs these to rebuild the payload skeleton — build extra "
+                "with checkpoint.dfw.run_extra(task, ...)"
+            )
+
+    def want(self, boundary_index: int, last: bool) -> bool:
+        return last or (boundary_index + 1) % self.save_every == 0
+
+    def save_segment(
+        self,
+        *,
+        t: int,
+        carry: EpochCarry,
+        history: Dict[str, list],
+        masks: Optional[np.ndarray],
+        done: bool,
+    ) -> None:
+        payload = {
+            "carry": carry._replace(iterate=low_rank.pack_live(carry.iterate)),
+            "history": _history_arrays(history),
+            "masks": (
+                np.zeros((0, 0), np.float32)
+                if masks is None
+                else np.asarray(masks, np.float32)
+            ),
+        }
+        extra = {
+            **self.extra,
+            "payload_format": PAYLOAD_FORMAT,
+            "t": int(t),
+            "done": bool(done),
+        }
+        self.store.save_async(int(t), payload, extra=extra)
+
+    def wait(self) -> None:
+        self.store.wait()
+
+
+def run_extra(
+    task,
+    *,
+    num_workers: int,
+    comm: str,
+    num_epochs: int,
+    schedule: str,
+    mu: float,
+    step_size: str,
+    **more,
+) -> Dict:
+    """The run-configuration record stamped into checkpoint manifests —
+    what ``restore_run`` needs to rebuild structure skeletons and what the
+    drivers validate before choosing the bit-exact vs elastic path."""
+    import jax
+
+    return {
+        "task": type(task).__name__,
+        "d": int(task.d),
+        "m": int(task.m),
+        "num_workers": int(num_workers),
+        "comm": comm,
+        "num_epochs": int(num_epochs),
+        "schedule": schedule,
+        "mu": float(mu),
+        "step_size": step_size,
+        "jax_version": jax.__version__,
+        **more,
+    }
+
+
+@dataclasses.dataclass
+class RunSnapshot:
+    """A restored run checkpoint, host-side (numpy leaves).
+
+    ``carry.iterate`` is still live-prefix packed; drivers re-pad to their
+    capacity with ``unpack_iterate``. ``t`` is the resume epoch (== number
+    of epochs executed == length of every ``history`` list)."""
+
+    t: int
+    carry: EpochCarry  # iterate packed; see unpack_iterate
+    history: Dict[str, list]
+    masks: Optional[np.ndarray]  # (num_epochs, nw) or None
+    extra: Dict
+
+    @property
+    def done(self) -> bool:
+        return bool(self.extra.get("done", False))
+
+    def unpack_iterate(self, max_rank: int) -> low_rank.FactoredIterate:
+        return low_rank.unpack_live(self.carry.iterate, max_rank)
+
+
+def _payload_like(state_like: PyTree, comm_state_like: PyTree) -> Dict:
+    """Structure skeleton matching ``RunCheckpointer.save_segment``'s
+    payload. Leaf *values* are ignored by restore; only the treedef counts
+    (the carry holds namedtuple nodes, which the store cannot re-serialize
+    on its own — see ``CheckpointStore.restore``)."""
+    z = np.zeros((0,), np.float32)
+    return {
+        "carry": EpochCarry(
+            state=state_like,
+            iterate=low_rank.packed_like(),
+            comm_state=comm_state_like,
+            t=z,
+            key=z,
+        ),
+        "history": {k: z for k in HISTORY_KEYS},
+        "masks": z,
+    }
+
+
+def read_run_extra(
+    store: Union[CheckpointStore, str, Path], step: Optional[int] = None
+) -> tuple:
+    """(step, extra) of a checkpoint without loading its arrays — the cheap
+    peek drivers use to build restore skeletons (saved comm spec, worker
+    count) before committing to a full restore."""
+    if isinstance(store, (str, Path)):
+        store = CheckpointStore(store)
+    if step is None:
+        step = store.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {store.dir}")
+    import json
+
+    manifest = json.loads(
+        (store.dir / f"step_{step:08d}" / "manifest.json").read_text()
+    )
+    return manifest["step"], manifest.get("extra", {})
+
+
+def restore_run(
+    store: Union[CheckpointStore, str, Path],
+    *,
+    state_like: PyTree,
+    step: Optional[int] = None,
+) -> RunSnapshot:
+    """Load a run checkpoint into a host-side ``RunSnapshot``.
+
+    ``state_like`` is any pytree with the *structure* of the saved task
+    state (e.g. a freshly built state for the same task) — required because
+    task states are namedtuples, whose treedefs the store cannot rebuild
+    unaided. The reducer-state skeleton is rebuilt from the manifest's saved
+    ``comm`` spec, so a warm restart that *changes* the comm mode still
+    restores cleanly (the driver then re-initializes fresh reducer state).
+    """
+    if isinstance(store, (str, Path)):
+        store = CheckpointStore(store)
+    step, extra = read_run_extra(store, step)
+    fmt = extra.get("payload_format", -1)
+    if fmt != PAYLOAD_FORMAT:
+        raise ValueError(
+            f"checkpoint step {step} has payload format {fmt}; this build "
+            f"reads {PAYLOAD_FORMAT}"
+        )
+    from ..comm import make_reducer
+
+    reducer = make_reducer(
+        extra["comm"], num_workers=max(1, int(extra["num_workers"]))
+    )
+    comm_like = reducer.state_spec(int(extra["d"]), int(extra["m"]))
+    like = _payload_like(state_like, comm_like)
+    step, payload, extra = store.restore(step, like=like)
+
+    carry = payload["carry"]
+    masks = payload["masks"]
+    return RunSnapshot(
+        t=int(extra["t"]),
+        carry=carry,
+        history=_history_lists(payload["history"]),
+        masks=None if masks.size == 0 else masks,
+        extra=extra,
+    )

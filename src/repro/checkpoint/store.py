@@ -11,23 +11,36 @@ Design points mirrored from production systems:
     each array under any new mesh/sharding (elastic scale up/down).
   * async: `save_async` snapshots device arrays to host (blocking only on
     transfer) then writes on a daemon thread; `wait()` joins before the next
-    save so at most one write is in flight.
-  * integrity: manifest written last, atomically (tmp+rename) — a crash
-    mid-write never yields a manifest pointing at partial data.
+    save so at most one write is in flight. A failed background write is
+    re-raised by the next `wait()` (or save) with the failing step and path.
+  * integrity: the step directory is assembled under a `.tmp_` prefix and
+    atomically renamed into place — a crash mid-write never yields a
+    `step_*` directory with partial data, and `latest_step`/`restore` only
+    ever see complete steps.
+  * retention: `keep_last=N` prunes older complete steps after each write
+    (on the writer thread), bounding disk for long checkpointed runs.
+
+The engine-facing layer — what goes *in* a DFW-Trace run checkpoint and how
+a run resumes from one (bit-exact or onto a different mesh) — lives in
+``checkpoint/dfw.py``; this module stays payload-agnostic.
 """
 from __future__ import annotations
 
 import json
-import os
-import queue
+import shutil
 import threading
 from pathlib import Path
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 PyTree = Any
+
+# Manifest schema version. Bump when the manifest layout changes; restore
+# rejects manifests newer than it knows how to read (older ones, written
+# before the field existed, read as 0 and stay loadable).
+MANIFEST_FORMAT = 1
 
 
 def _flatten(tree: PyTree):
@@ -43,39 +56,79 @@ def _leaf_paths(tree: PyTree):
 
 
 class CheckpointStore:
-    def __init__(self, directory: str | Path):
+    def __init__(self, directory: str | Path, *, keep_last: Optional[int] = None):
+        if keep_last is not None and keep_last < 1:
+            raise ValueError(f"keep_last={keep_last}: must be >= 1 (or None)")
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
         self._thread: Optional[threading.Thread] = None
-        self._error: Optional[BaseException] = None
+        self._error: Optional[Tuple[int, Path, BaseException]] = None
+        # Recover from a crash inside _write's overwrite window: an
+        # ``.old_step_X`` with no ``step_X`` means the durable copy was
+        # renamed aside but its replacement never landed — put it back (the
+        # aside copy is known-complete; the staged ``.tmp`` may be torn).
+        # With ``step_X`` present the aside is just unreclaimed garbage.
+        for old in self.dir.glob(".old_step_*"):
+            target = self.dir / old.name[len(".old_"):]
+            if old.is_dir() and not target.exists():
+                old.rename(target)
+            else:
+                shutil.rmtree(old, ignore_errors=True)
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: PyTree, *, extra: Optional[Dict] = None) -> Path:
         self.wait()
         host = jax.tree.map(lambda x: np.asarray(x), tree)
-        return self._write(step, host, extra or {})
+        out = self._write(step, host, extra or {})
+        self._prune(keep=step)
+        return out
 
     def save_async(self, step: int, tree: PyTree, *, extra: Optional[Dict] = None) -> None:
-        """Snapshot to host memory now; write to disk on a background thread."""
+        """Snapshot to host memory now; write to disk on a background thread.
+
+        A write failure is reported by the *next* ``wait()`` (implicit in the
+        next save) — callers on the hot path never block on disk, but must
+        call ``wait()`` once after the last save or the final step's failure
+        would go unobserved.
+        """
         self.wait()
         host = jax.tree.map(lambda x: np.asarray(x), tree)  # D2H copy (blocking)
 
         def _run():
             try:
                 self._write(step, host, extra or {})
+                self._prune(keep=step)
             except BaseException as e:  # noqa: BLE001
-                self._error = e
+                self._error = (step, self.dir / f"step_{step:08d}", e)
 
         self._thread = threading.Thread(target=_run, daemon=True)
         self._thread.start()
 
     def wait(self) -> None:
+        """Join the in-flight write; re-raise its failure with context.
+
+        The original exception rides as ``__cause__``, so tracebacks keep the
+        real I/O error while the message pins *which* checkpoint was lost.
+        """
         if self._thread is not None:
             self._thread.join()
             self._thread = None
         if self._error is not None:
-            err, self._error = self._error, None
-            raise err
+            (step, path, err), self._error = self._error, None
+            raise RuntimeError(
+                f"async checkpoint write for step {step} failed at {path}: "
+                f"{type(err).__name__}: {err}"
+            ) from err
+
+    def _prune(self, keep: int) -> None:
+        """Drop complete steps older than the ``keep_last`` newest (always
+        retaining ``keep``, the step just written)."""
+        if self.keep_last is None:
+            return
+        steps = [s for s in self.steps() if s != keep]
+        for s in steps[: max(0, len(steps) + 1 - self.keep_last)]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
 
     def _write(self, step: int, host_tree: PyTree, extra: Dict) -> Path:
         out = self.dir / f"step_{step:08d}"
@@ -92,6 +145,7 @@ class CheckpointStore:
         except ValueError:
             treedef_hex = None
         manifest = {
+            "format": MANIFEST_FORMAT,
             "step": step,
             "extra": extra,
             "treedef": treedef_hex,
@@ -105,18 +159,47 @@ class CheckpointStore:
             )
         (tmp / "manifest.json").write_text(json.dumps(manifest))
         if out.exists():
-            import shutil
-
-            shutil.rmtree(out)
-        tmp.rename(out)
+            # Re-saving an existing step id (a resume from an older step
+            # overwriting later history). POSIX can't atomically swap two
+            # non-empty directories, so rename the durable step aside and
+            # the complete replacement in — two renames, during which the
+            # step id is briefly unlisted but both complete copies exist on
+            # disk (vs. rmtree-then-rename, which would destroy the durable
+            # copy before the replacement lands). ``.old_*``/``.tmp_*``
+            # never match the ``step_*`` glob, so readers only ever see
+            # complete steps.
+            old = self.dir / f".old_step_{step:08d}"
+            if old.exists():
+                shutil.rmtree(old)
+            out.rename(old)
+            tmp.rename(out)
+            shutil.rmtree(old, ignore_errors=True)
+        else:
+            tmp.rename(out)
         return out
 
     # --------------------------------------------------------------- restore
-    def latest_step(self) -> Optional[int]:
-        steps = sorted(
+    def steps(self) -> List[int]:
+        """Sorted complete steps. ``.tmp_step_*`` directories (a write that
+        never reached its atomic rename) are invisible here by construction."""
+        return sorted(
             int(p.name.split("_")[1]) for p in self.dir.glob("step_*") if p.is_dir()
         )
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
         return steps[-1] if steps else None
+
+    def discard_after(self, step: int) -> None:
+        """Remove complete steps newer than ``step``. A run that resumes
+        from an interior step and keeps checkpointing into the same
+        directory must drop the abandoned timeline's later steps first —
+        otherwise a later default (latest-step) restore would silently
+        splice the dead run's tail onto the new run's history."""
+        self.wait()
+        for s in self.steps():
+            if s > step:
+                shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
 
     def restore(
         self,
@@ -134,6 +217,12 @@ class CheckpointStore:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         src = self.dir / f"step_{step:08d}"
         manifest = json.loads((src / "manifest.json").read_text())
+        fmt = manifest.get("format", 0)
+        if fmt > MANIFEST_FORMAT:
+            raise ValueError(
+                f"checkpoint {src} has manifest format {fmt}; this build "
+                f"reads <= {MANIFEST_FORMAT} — upgrade to restore it"
+            )
         leaves = [np.load(src / rec["file"]) for rec in manifest["leaves"]]
 
         if like is not None:

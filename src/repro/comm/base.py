@@ -47,6 +47,21 @@ class Reducer:
         """Per-worker reducer state for (d,)-slot "u" and (m,)-slot "v"."""
         return ()
 
+    def state_spec(self, d: int, m: int) -> PyTree:
+        """Structure/shape/dtype of ONE worker's state, as a pytree of
+        ``jax.ShapeDtypeStruct`` — no allocation. This is the reducer's
+        save/restore contract: checkpoints store the state with a leading
+        worker axis prepended to every leaf, restore skeletons are built
+        from this spec, and an elastic remesh (worker count change)
+        re-*initializes* via ``init_state`` rather than re-sharding —
+        residuals are per-worker quantities that cannot follow a data
+        repartition. The default derives the spec from ``init_state``;
+        stateful reducers should override it to avoid the allocation."""
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            self.init_state(d, m),
+        )
+
     def reduce(
         self,
         x: jax.Array,

@@ -39,7 +39,10 @@ from . import base
 @dataclasses.dataclass(frozen=True)
 class Int8Reducer(base.Reducer):
     """Stateless (no error feedback): quantization noise is zero-mean, so
-    there is no systematic residual to feed back."""
+    there is no systematic residual to feed back. Its ``state_spec`` is
+    therefore ``()`` — checkpoints save nothing for it, and a bit-exact
+    resume needs only the carried PRNG key (the stochastic-rounding noise
+    is keyed off the epoch counter folded into the run key)."""
 
     num_workers: int = 1
     use_pallas: Optional[bool] = None

@@ -44,6 +44,16 @@ class TopKReducer(base.Reducer):
             "v": jnp.zeros((m,), jnp.float32),
         }
 
+    def state_spec(self, d: int, m: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        # One worker's error-feedback residuals. Checkpoints carry these per
+        # worker (leading worker axis); a remesh re-initializes them — the
+        # unsent mass they hold belongs to a data shard that no longer
+        # exists, and EF re-accumulates it within a few rounds.
+        return {
+            "u": jax.ShapeDtypeStruct((d,), jnp.float32),
+            "v": jax.ShapeDtypeStruct((m,), jnp.float32),
+        }
+
     def reduce(self, x, state, *, slot, key, axis_name=None, weight=None):
         e = state[slot]
         c = x.astype(jnp.float32) + e

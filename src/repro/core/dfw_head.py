@@ -87,6 +87,9 @@ def sharded_fit(
     schedule: str = "const:2",
     key: Optional[jax.Array] = None,
     gap_tol: Optional[float] = None,
+    block_epochs: Optional[int] = None,
+    checkpointer=None,
+    resume=None,
 ) -> HeadFitResult:
     """DFW-TRACE with the sample axis sharded over ``data_axes`` — the
     production path the multi-pod dry-run lowers. Every epoch's cross-device
@@ -94,6 +97,14 @@ def sharded_fit(
     device-resident engine: each constant-K(t) segment is one ``lax.scan``
     inside shard_map, so a ``const:K`` head fit is a single jit dispatch;
     ``gap_tol`` stops on the duality-gap certificate at segment granularity.
+
+    Long head fits are durable like any other DFW-Trace run:
+    ``checkpointer`` (``repro.checkpoint.RunCheckpointer``) saves the carry
+    at segment boundaries, and ``resume`` (a ``repro.checkpoint.
+    RunSnapshot``, e.g. from ``checkpoint.restore_run`` with the sharded
+    ``LogisticState`` as ``state_like``) continues a previous fit from its
+    saved epoch — the restored global state is re-placed onto *this* mesh,
+    so resuming onto a different worker count is the elastic path.
     """
     task = tasks.MultinomialLogistic(d=x.shape[1], m=num_classes)
     ax = data_axes if len(data_axes) > 1 else data_axes[0]
@@ -104,6 +115,32 @@ def sharded_fit(
         jax.device_put(x, NamedSharding(mesh, P(ax))),
         jax.device_put(y, NamedSharding(mesh, P(ax))),
     )
+    iterate, start_t, initial_history = None, 0, None
+    if resume is not None:
+        state = jax.tree.map(
+            lambda a, s: jax.device_put(jnp.asarray(a), NamedSharding(mesh, s)),
+            resume.carry.state, state_specs,
+        )
+        key = jnp.asarray(resume.carry.key)
+        start_t, initial_history = resume.t, resume.history
+        # Capacity must hold the checkpoint's live factors even when the
+        # checkpoint already covers (or exceeds) the requested budget — the
+        # finished-run return below still needs the unpacked iterate.
+        iterate = resume.unpack_iterate(
+            engine.resolve_max_rank(None, max(num_epochs, start_t))
+        )
+        if start_t >= num_epochs:
+            # The checkpoint already covers the requested budget (the final
+            # boundary is always saved): return it rather than asking the
+            # engine for zero epochs.
+            final_loss = float(jax.device_get(jax.jit(task.local_loss)(state)))
+            return HeadFitResult(iterate=iterate, history=resume.history,
+                                 final_loss=final_loss)
+    if checkpointer is not None:
+        # Same contract as launch/dfw's drivers: the store is this run's
+        # timeline — steps past start_t (all steps, for a fresh fit) would
+        # shadow the new history on a later default latest-step restore.
+        checkpointer.store.discard_after(start_t)
     res = frank_wolfe.fit(
         task, state, mu=mu, num_epochs=num_epochs,
         key=key if key is not None else jax.random.PRNGKey(0),
@@ -111,6 +148,11 @@ def sharded_fit(
         axis_name=ax,
         segment_wrapper=wrapper,
         gap_tol=gap_tol,
+        block_epochs=block_epochs,
+        iterate=iterate,
+        start_t=start_t,
+        initial_history=initial_history,
+        checkpointer=checkpointer,
     )
     return HeadFitResult(iterate=res.iterate, history=res.history,
                          final_loss=res.final_loss)

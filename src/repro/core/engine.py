@@ -63,23 +63,38 @@ class Segment(NamedTuple):
 
 
 def plan_segments(
-    schedule: str, num_epochs: int, block_epochs: Optional[int] = None
+    schedule: str,
+    num_epochs: int,
+    block_epochs: Optional[int] = None,
+    *,
+    start: int = 0,
 ) -> List[Segment]:
-    """Partition ``[0, num_epochs)`` into maximal constant-K segments.
+    """Partition ``[start, num_epochs)`` into maximal constant-K segments.
 
     ``block_epochs`` caps segment length: early stopping acts at segment
     granularity, so the cap bounds how many epochs a converged run can
     execute past its certificate (and how stale a progress callback gets).
     Equal-length blocks of the same K share one compiled executable, so
     chopping a long ``const:K`` run costs extra dispatches, not compiles.
+
+    ``start`` > 0 is the resume case: checkpoints are written at segment
+    boundaries, and because maximality (and the block cap) are computed
+    from each segment's own start, planning from a boundary of the full
+    plan reproduces exactly that plan's remaining segments — a resumed run
+    dispatches the same (K, length) executables the uninterrupted run
+    would have, which is what makes bit-exact resume possible.
     """
     if num_epochs < 1:
         raise ValueError(f"num_epochs={num_epochs}: need at least one epoch")
     if block_epochs is not None and block_epochs < 1:
         raise ValueError(f"block_epochs={block_epochs}: must be >= 1")
+    if not 0 <= start < num_epochs:
+        raise ValueError(
+            f"start={start}: must lie in [0, num_epochs={num_epochs})"
+        )
     sched = k_schedule(schedule)
     segments: List[Segment] = []
-    t = 0
+    t = start
     while t < num_epochs:
         k = sched(t)
         end = t + 1
@@ -256,6 +271,22 @@ def shard_map_segment_wrapper(
 _HISTORY_KEYS = ("loss", "gap", "sigma", "gamma")
 
 
+def _assemble_history(
+    prefix: Dict[str, list], aux_blocks: List[tuple], upto: int
+) -> Dict[str, list]:
+    """Prefix history + every fetched aux block, truncated to ``upto``
+    executed epochs (rows past an early stop are NaN no-op fillers). All
+    blocks must carry their host copy — callers fetch before assembling."""
+    hist = {name: list(prefix[name]) for name in (*_HISTORY_KEYS, "k")}
+    for seg, host_aux, _ in aux_blocks:
+        for name, col in zip(_HISTORY_KEYS, host_aux):
+            hist[name].extend(float(v) for v in col)
+        hist["k"].extend([seg.k] * seg.length)
+    for name in hist:
+        del hist[name][upto:]
+    return hist
+
+
 def run_epochs(
     task,
     state: PyTree,
@@ -276,6 +307,9 @@ def run_epochs(
     segment_wrapper: Optional[Callable[[Callable], Callable]] = None,
     callback: Optional[Callable[[int, EpochAux], None]] = None,
     mode: str = "scan",
+    start_t: int = 0,
+    initial_history: Optional[Dict[str, list]] = None,
+    checkpointer=None,
 ) -> EngineResult:
     """Run up to ``num_epochs`` DFW-Trace epochs, device-resident.
 
@@ -290,9 +324,41 @@ def run_epochs(
     at boundaries only. ``mode="legacy"``: the pre-engine loop — per-epoch
     dispatch plus four blocking scalar pulls — same math, same carry, kept
     as the equivalence oracle and overhead baseline.
+
+    **Checkpointing.** ``checkpointer`` (``repro.checkpoint.dfw.
+    RunCheckpointer`` or anything duck-compatible) makes the run durable:
+    on the segment boundaries the checkpointer *wants*, the engine fetches
+    the carry + the not-yet-fetched aux history with ONE explicit batched
+    ``device_get`` and hands them over for an async write — dispatch counts
+    are unchanged, boundaries it doesn't want stay sync-free (unless
+    ``gap_tol``/callback already sync there), and the hot path never blocks
+    on disk (the D2H snapshot is the only added cost). The epoch-t
+    checkpoint holds everything the remaining epochs read, so a later run
+    can resume from it.
+
+    **Resume.** ``start_t`` (a segment boundary reached by a previous run —
+    any checkpoint step qualifies) starts the carry at epoch ``start_t``
+    instead of 0; ``state``/``iterate``/``comm_state``/``key`` must then be
+    the restored carry fields, ``initial_history`` the restored per-epoch
+    history (length ``start_t``), and ``masks``/``num_epochs``/``schedule``
+    the full-run values — the plan is recomputed from ``start_t`` and the
+    same executables re-dispatch, reproducing the uninterrupted trajectory
+    bit-for-bit (pinned in ``tests/test_checkpoint_resume.py``).
     """
     if mode not in ("scan", "legacy"):
         raise ValueError(f"mode={mode!r}: expected 'scan' or 'legacy'")
+    if not 0 <= start_t < num_epochs:
+        raise ValueError(
+            f"start_t={start_t}: must lie in [0, num_epochs={num_epochs}) — "
+            "a run checkpointed at or past num_epochs has nothing left to do"
+        )
+    if initial_history is not None:
+        for name, vals in initial_history.items():
+            if len(vals) != start_t:
+                raise ValueError(
+                    f"initial_history[{name!r}] has {len(vals)} entries for "
+                    f"start_t={start_t}; pass the restored prefix unmodified"
+                )
     if reducer is None:
         from ..comm.base import DenseReducer
 
@@ -320,7 +386,8 @@ def run_epochs(
             )
 
     segments = plan_segments(
-        schedule, num_epochs, 1 if mode == "legacy" else block_epochs
+        schedule, num_epochs, 1 if mode == "legacy" else block_epochs,
+        start=start_t,
     )
     stats = {
         "segments_planned": len(segments),
@@ -346,18 +413,32 @@ def run_epochs(
             stats["compilations"] += 1
         return compiled[sig]
 
-    carry = init_carry(state, iterate, key, comm_state)
+    carry = init_carry(state, iterate, key, comm_state, t=start_t)
     done = jnp.zeros((), jnp.bool_)
-    nrun = jnp.zeros((), jnp.int32)
-    history: Dict[str, list] = {k: [] for k in _HISTORY_KEYS}
-    history["k"] = []
+    nrun = jnp.full((), start_t, jnp.int32)
+    history: Dict[str, list] = {
+        k: list(initial_history[k]) if initial_history is not None else []
+        for k in (*_HISTORY_KEYS, "k")
+    }
+
+    # Lazy one-time host copy of the mask schedule for checkpoint payloads.
+    host_masks_cache: List[Any] = []
+
+    def _host_masks():
+        if masks is None:
+            return None
+        if not host_masks_cache:
+            host_masks_cache.append(jax.device_get(masks))
+            stats["host_syncs"] += 1
+        return host_masks_cache[0]
 
     if mode == "legacy":
         # Pre-engine behavior: one dispatch + four blocking float() pulls
         # per epoch (each an implicit device->host transfer, like the old
-        # driver's `float(aux.loss)` lines).
-        epochs_run = 0
-        for seg in segments:
+        # driver's `float(aux.loss)` lines). Boundaries are every epoch, so
+        # a checkpointer here saves (at most) once per epoch.
+        epochs_run = start_t
+        for i, seg in enumerate(segments):
             args = (carry, done, nrun) + ((masks,) if has_masks else ())
             carry, done, nrun, aux = get_compiled(seg)(*args)
             stats["dispatches"] += 1
@@ -372,46 +453,87 @@ def run_epochs(
             if callback is not None:
                 callback(seg.start, jax.device_get(aux))
                 stats["host_syncs"] += 1
-            if gap_tol is not None and row[1] <= gap_tol:
+            stop = gap_tol is not None and row[1] <= gap_tol
+            if checkpointer is not None:
+                last = stop or i == len(segments) - 1
+                if checkpointer.want(i, last):
+                    host_carry = jax.device_get(carry)
+                    stats["host_syncs"] += 1
+                    checkpointer.save_segment(
+                        t=epochs_run, carry=host_carry, history=history,
+                        masks=_host_masks(), done=stop,
+                    )
+            if stop:
                 break
         return EngineResult(
             carry=carry, history=history, epochs_run=epochs_run, stats=stats
         )
 
     # (Segment, host EpochAux | None, device EpochAux) per segment run; the
-    # host slot is filled when a callback already fetched the block, so the
-    # final history assembly never transfers the same rows twice.
+    # host slot is filled when a callback or checkpoint already fetched the
+    # block, so the final history assembly never transfers the same rows
+    # twice.
     aux_blocks: List[tuple] = []
-    for seg in segments:
+    for i, seg in enumerate(segments):
         args = (carry, done, nrun) + ((masks,) if has_masks else ())
         carry, done, nrun, aux = get_compiled(seg)(*args)
         stats["dispatches"] += 1
         stats["segments_run"] += 1
         host_aux = None
-        if callback is not None:
-            host_aux = jax.device_get(aux)
+        host_done = None
+        if callback is not None or (checkpointer is not None and gap_tol is not None):
+            # The light boundary fetch: aux rows + the two scalars — it
+            # serves the callback and the early-stop check in one sync.
+            # Without a callback or gap_tol, boundaries the checkpointer
+            # does NOT want stay sync-free, preserving the dispatch
+            # pipelining and the batched end-of-run aux fetch.
+            host_aux, host_done, host_nrun = jax.device_get((aux, done, nrun))
             stats["host_syncs"] += 1
-            callback(seg.start, host_aux)
+            host_done = bool(host_done)
+            if callback is not None:
+                callback(seg.start, host_aux)
         aux_blocks.append((seg, host_aux, aux))
+        if checkpointer is not None:
+            last = bool(host_done) or i == len(segments) - 1
+            if checkpointer.want(i, last):
+                # One batched sync: the carry (the payload) plus every aux
+                # block not yet on host (skipped boundaries included) plus
+                # the scalars — the checkpoint needs the full history-so-far
+                # anyway, and the blocks are reused by the final assembly.
+                pending_idx = [
+                    j for j, (_, h, _) in enumerate(aux_blocks) if h is None
+                ]
+                host_carry, pend, host_done, host_nrun = jax.device_get(
+                    (carry, [aux_blocks[j][2] for j in pending_idx], done, nrun)
+                )
+                stats["host_syncs"] += 1
+                host_done = bool(host_done)
+                for j, h in zip(pending_idx, pend):
+                    aux_blocks[j] = (aux_blocks[j][0], h, aux_blocks[j][2])
+                t_now = int(host_nrun)
+                checkpointer.save_segment(
+                    t=t_now, carry=host_carry,
+                    history=_assemble_history(history, aux_blocks, t_now),
+                    masks=_host_masks(), done=host_done,
+                )
         if gap_tol is not None:
-            # The only mid-run sync: one scalar at the segment boundary,
-            # deciding whether to launch the next segment.
-            stats["host_syncs"] += 1
-            if bool(jax.device_get(done)):
+            if host_done is None:
+                # The only mid-run sync: one scalar at the segment boundary,
+                # deciding whether to launch the next segment.
+                stats["host_syncs"] += 1
+                host_done = bool(jax.device_get(done))
+            if host_done:
                 break
 
     pending = [a for _, h, a in aux_blocks if h is None]
     fetched, epochs_run = jax.device_get((pending, nrun))
     stats["host_syncs"] += 1
     epochs_run = int(epochs_run)
-    fetched = iter(fetched)
-    for seg, host_aux, _ in aux_blocks:
-        block = host_aux if host_aux is not None else next(fetched)
-        for name, col in zip(_HISTORY_KEYS, block):
-            history[name].extend(float(v) for v in col)
-        history["k"].extend([seg.k] * seg.length)
-    for name in history:
-        del history[name][epochs_run:]
+    it = iter(fetched)
+    aux_blocks = [
+        (seg, h if h is not None else next(it), a) for seg, h, a in aux_blocks
+    ]
+    history = _assemble_history(history, aux_blocks, epochs_run)
     return EngineResult(
         carry=carry, history=history, epochs_run=epochs_run, stats=stats
     )

@@ -68,11 +68,13 @@ def init_carry(
     iterate: low_rank.FactoredIterate,
     key: jax.Array,
     comm_state: PyTree = (),
+    t: int = 0,
 ) -> EpochCarry:
-    """Epoch-0 carry: t = 0 on device, comm state defaulting to dense's ()."""
+    """Carry at epoch ``t`` (0 for a fresh run; a checkpoint's saved epoch
+    counter when resuming), comm state defaulting to dense's ()."""
     return EpochCarry(
         state=state, iterate=iterate, comm_state=comm_state,
-        t=jnp.zeros((), jnp.int32), key=key,
+        t=jnp.full((), t, jnp.int32), key=key,
     )
 
 
@@ -248,6 +250,11 @@ def fit(
     gap_tol: Optional[float] = None,
     block_epochs: Optional[int] = None,
     mode: str = "scan",
+    iterate: Optional[low_rank.FactoredIterate] = None,
+    comm_state: Optional[PyTree] = None,
+    start_t: int = 0,
+    initial_history: Optional[Dict[str, list]] = None,
+    checkpointer=None,
 ) -> FitResult:
     """Run DFW-TRACE for up to ``num_epochs`` on the device-resident engine.
 
@@ -294,7 +301,16 @@ def fit(
     exact dense psum. ``mode="legacy"`` runs the pre-engine per-epoch
     dispatch loop (one jit call + four blocking scalar transfers per epoch)
     — kept as the equivalence/off-device-overhead baseline; ``"scan"`` is
-    the production path."""
+    the production path.
+
+    ``checkpointer`` (``repro.checkpoint.dfw.RunCheckpointer``) saves the
+    full run carry asynchronously at segment boundaries; to resume, pass
+    the restored carry fields back in — ``state``/``iterate``/
+    ``comm_state``/``key`` from the checkpoint, ``start_t`` its epoch,
+    ``initial_history`` its history — and the run continues bit-exactly
+    (see ``core/engine.run_epochs`` and ``tests/test_checkpoint_resume``;
+    ``launch/dfw.fit`` wires this end to end via ``DFWConfig.resume_from``).
+    """
     from .engine import run_epochs  # local import: engine builds on this module
 
     eres = run_epochs(
@@ -307,13 +323,22 @@ def fit(
         step_size=step_size,
         axis_name=axis_name,
         reducer=reducer,
+        iterate=iterate,
+        comm_state=comm_state,
         max_rank=max_rank,
         gap_tol=gap_tol,
         block_epochs=block_epochs,
         segment_wrapper=segment_wrapper,
         callback=callback,
         mode=mode,
+        start_t=start_t,
+        initial_history=initial_history,
+        checkpointer=checkpointer,
     )
+    if checkpointer is not None:
+        # Join the last async write so its failure surfaces with the run,
+        # not silently at interpreter exit.
+        checkpointer.wait()
     # Loss at the *returned* iterate (cheap: one O(n_j) reduction outside the
     # epoch; on sharded state the plain sum is already the global loss).
     final_loss = float(jax.device_get(jax.jit(task.local_loss)(eres.carry.state)))

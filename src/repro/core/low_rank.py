@@ -93,3 +93,63 @@ def right_multiply(it: FactoredIterate, x: jax.Array) -> jax.Array:
 def trace_norm_upper_bound(it: FactoredIterate) -> jax.Array:
     """||W||_* <= alpha * sum_k |s_k| (triangle inequality on unit factors)."""
     return jnp.abs(it.alpha) * jnp.sum(jnp.abs(it.s))
+
+
+# ---------------------------------------------------------------------------
+# Serialization: live-rank prefix packing (checkpoint/dfw.py payloads)
+# ---------------------------------------------------------------------------
+
+
+def pack_live(it: FactoredIterate) -> dict:
+    """Host-side dict of the iterate trimmed to its ``count`` live factors.
+
+    The buffers are preallocated at ``max_rank`` but rows at indices
+    >= ``count`` are all-zero by construction (``init`` zeros them;
+    ``fw_update`` only ever writes row ``count``), so a t-epoch checkpoint
+    stores t factors instead of ``max_rank`` — and ``unpack_live`` re-pads
+    to *any* capacity bit-exactly."""
+    import numpy as np
+
+    k = int(np.asarray(it.count))
+    return {
+        "u": np.asarray(it.u)[:k],
+        "s": np.asarray(it.s)[:k],
+        "v": np.asarray(it.v)[:k],
+        "alpha": np.asarray(it.alpha),
+        "count": np.asarray(it.count),
+    }
+
+
+def unpack_live(packed: dict, max_rank: int) -> FactoredIterate:
+    """Inverse of ``pack_live`` onto a ``max_rank``-capacity store. The new
+    capacity may differ from the one at save time (a resumed run may extend
+    ``num_epochs``) as long as it holds the live prefix."""
+    import numpy as np
+
+    k = int(np.asarray(packed["count"]))
+    if max_rank < k:
+        raise ValueError(
+            f"max_rank={max_rank} < {k} live factors in the packed iterate"
+        )
+
+    def pad(x):
+        out = np.zeros((max_rank,) + x.shape[1:], x.dtype)
+        out[:k] = x
+        return jnp.asarray(out)
+
+    return FactoredIterate(
+        u=pad(np.asarray(packed["u"])),
+        s=pad(np.asarray(packed["s"])),
+        v=pad(np.asarray(packed["v"])),
+        alpha=jnp.asarray(packed["alpha"]),
+        count=jnp.asarray(packed["count"]),
+    )
+
+
+def packed_like() -> dict:
+    """Structure skeleton of ``pack_live``'s output (for treedef-matching
+    restores; leaf values are ignored)."""
+    import numpy as np
+
+    z = np.zeros((0,), np.float32)
+    return {"u": z, "s": z, "v": z, "alpha": z, "count": z}

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .. import comm as comm_lib
+from ..checkpoint import dfw as ckpt
 from ..compat import shard_map_compat
 from ..core import engine, frank_wolfe, low_rank, tasks
 from ..core.frank_wolfe import EpochAux
@@ -92,6 +93,32 @@ class DFWConfig:
     progress ``callback``. ``engine`` selects the execution mode: "scan"
     (production: one dispatch per K(t) segment) or "legacy" (per-epoch
     dispatch + blocking scalar pulls; the overhead baseline).
+
+    **Fault tolerance.** ``checkpoint_dir`` makes the run durable: at every
+    ``checkpoint_every``-th segment boundary the full run carry (task
+    state, factored iterate, per-worker comm state, epoch counter, PRNG
+    key) plus history and the straggler-mask schedule are written
+    asynchronously (``repro.checkpoint``), keeping the newest
+    ``checkpoint_keep`` steps. The run *owns* the directory's timeline: a
+    fresh run clears any previous run's steps, and a resume drops steps
+    past its resume point, so the latest step is always this run's.
+    ``resume_from`` (a checkpoint directory; ``resume_step`` picks an
+    exact step, default latest) restarts a run from its last durable
+    boundary:
+
+    - **bit-exact** when the worker count and ``comm`` mode are unchanged —
+      the resumed trajectory equals the uninterrupted one bit for bit;
+    - **elastic** when the worker count differs — the row-blocked task
+      state is re-sharded onto the new mesh, per-worker comm state is
+      re-initialized, the mask schedule is re-drawn, and the run converges
+      to the same solution (within float-summation-order noise);
+    - **warm restart**: ``gap_tol``, ``schedule``, ``num_epochs``, and
+      ``comm`` may all differ from the checkpointed run's — the new values
+      apply from the resume point (a changed ``comm`` re-initializes
+      reducer state, costing exactness but not correctness).
+
+    Note ``block_epochs`` bounds the work a crash can lose: an unbroken
+    ``const:K`` run is a single segment and only checkpoints at its end.
     """
 
     mu: float
@@ -110,6 +137,11 @@ class DFWConfig:
     gap_tol: Optional[float] = None  # duality-gap early-stop threshold
     block_epochs: Optional[int] = None  # max epochs per scan segment
     engine: str = "scan"  # "scan" (device-resident) or "legacy" (per-epoch)
+    checkpoint_dir: Optional[str] = None  # enable segment-boundary checkpoints
+    checkpoint_every: int = 1  # save every Nth segment boundary
+    checkpoint_keep: Optional[int] = 2  # retained steps (None = all)
+    resume_from: Optional[str] = None  # checkpoint dir to restore from
+    resume_step: Optional[int] = None  # exact step (default: latest)
 
 
 @dataclasses.dataclass
@@ -416,6 +448,69 @@ def make_sharded_epoch(
 
 
 # ---------------------------------------------------------------------------
+# Checkpoint / resume plumbing shared by the drivers
+# ---------------------------------------------------------------------------
+
+
+def _check_snapshot(snap: ckpt.RunSnapshot, task, cfg: DFWConfig) -> None:
+    """A checkpoint is only resumable onto the problem it was saved from:
+    same task type and dimensions (worker count / comm / schedule MAY
+    change — that's elastic / warm restart). Mismatches here mean the
+    caller pointed resume_from at the wrong run."""
+    ext = snap.extra
+    want = (type(task).__name__, int(task.d), int(task.m))
+    got = (ext.get("task"), int(ext.get("d", -1)), int(ext.get("m", -1)))
+    if want != got:
+        raise ValueError(
+            f"checkpoint was saved by task {got} but resume targets {want}; "
+            "resume_from must point at a checkpoint of the same problem"
+        )
+    if snap.t > cfg.num_epochs:
+        raise ValueError(
+            f"checkpoint is at epoch {snap.t} but num_epochs={cfg.num_epochs}; "
+            "extend num_epochs to resume past it"
+        )
+
+
+def _resume_complete(snap: ckpt.RunSnapshot, cfg: DFWConfig) -> bool:
+    """Does the checkpoint already satisfy the *current* config? True when
+    the epoch budget is spent, or when the saved early stop still stands
+    under cfg's gap_tol. A warm restart that extends num_epochs or loosens/
+    removes gap_tol re-enters the engine instead of returning the stopped
+    run verbatim — the saved ``done`` flag records the OLD certificate, not
+    this one."""
+    if snap.t >= cfg.num_epochs:
+        return True
+    if not snap.done:
+        return False
+    gaps = snap.history.get("gap", [])
+    return bool(gaps) and cfg.gap_tol is not None and gaps[-1] <= cfg.gap_tol
+
+
+def _make_checkpointer(
+    task, cfg: DFWConfig, nw: int, comm_spec: str
+) -> Optional[ckpt.RunCheckpointer]:
+    if cfg.checkpoint_dir is None:
+        return None
+    return ckpt.RunCheckpointer(
+        cfg.checkpoint_dir,
+        save_every=cfg.checkpoint_every,
+        keep_last=cfg.checkpoint_keep,
+        extra=ckpt.run_extra(
+            task,
+            num_workers=nw,
+            comm=comm_spec,
+            num_epochs=cfg.num_epochs,
+            schedule=cfg.schedule,
+            mu=cfg.mu,
+            step_size=cfg.step_size,
+            sample_prob=cfg.sample_prob,
+            reweight=cfg.reweight,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Drivers
 # ---------------------------------------------------------------------------
 
@@ -508,6 +603,68 @@ def fit(
     else:
         masks = jnp.ones((cfg.num_epochs, nw), jnp.float32)
 
+    start_t, initial_history = 0, None
+    if cfg.resume_from is not None:
+        # `state` (freshly built above) supplies the treedef skeleton; its
+        # values are then replaced wholesale by the checkpointed ones.
+        snap = ckpt.restore_run(
+            cfg.resume_from, state_like=state, step=cfg.resume_step
+        )
+        _check_snapshot(snap, task, cfg)
+        state = shard_rowwise(mesh, snap.carry.state, cfg.data_axis)
+        it = snap.unpack_iterate(max_rank)
+        key = jnp.asarray(snap.carry.key)
+        start_t, initial_history = snap.t, snap.history
+        same_mesh = int(snap.extra.get("num_workers", -1)) == nw
+        if same_mesh and snap.extra.get("comm") == reducer.spec:
+            # Bit-exact path: per-worker reducer state (e.g. top-k
+            # error-feedback residuals) resumes exactly where it stopped.
+            comm_state = jax.tree.map(
+                lambda leaf: jax.device_put(
+                    jnp.asarray(leaf), NamedSharding(mesh, P(cfg.data_axis))
+                ),
+                snap.carry.comm_state,
+            )
+        # else: keep the freshly initialized comm_state — an elastic remesh
+        # (or a warm comm-mode change) re-derives per-worker state.
+        same_sampling = (
+            float(snap.extra.get("sample_prob", -1.0)) == cfg.sample_prob
+            and bool(snap.extra.get("reweight", not cfg.reweight))
+            == cfg.reweight
+        )
+        if (
+            same_mesh
+            and same_sampling
+            and snap.masks is not None
+            and snap.masks.shape == (cfg.num_epochs, nw)
+        ):
+            masks = jnp.asarray(snap.masks)
+        # else: the regenerated schedule above stands — a new worker count
+        # or extended num_epochs re-draws it, and a warm restart that
+        # changes sample_prob/reweight must get the schedule it asked for,
+        # not the checkpointed run's.
+        if _resume_complete(snap, cfg):
+            # Nothing left to run: the checkpoint already holds the final
+            # carry (epoch budget spent, or its gap certificate still
+            # stands under this config's gap_tol).
+            final_loss = float(jax.device_get(jax.jit(ktask.local_loss)(state)))
+            return DFWFitResult(
+                iterate=it, state=state, history=snap.history,
+                masks=masks[: snap.t] if sampling else None,
+                final_loss=final_loss, epochs_run=snap.t,
+                stats={"segments_planned": 0, "segments_run": 0,
+                       "dispatches": 1, "compilations": 1, "host_syncs": 1},
+            )
+
+    checkpointer = _make_checkpointer(task, cfg, nw, reducer.spec)
+    if checkpointer is not None:
+        # checkpoint_dir belongs to THIS run's timeline from here on: a
+        # fresh run clears any previous run's steps, a resume keeps its
+        # prefix and drops the abandoned tail. Either way, steps past
+        # start_t would shadow this run's history on the next default
+        # (latest-step) resume.
+        checkpointer.store.discard_after(start_t)
+
     wrapper = engine.shard_map_segment_wrapper(
         mesh,
         cfg.data_axis,
@@ -533,7 +690,15 @@ def fit(
         segment_wrapper=wrapper,
         callback=callback,
         mode=cfg.engine,
+        start_t=start_t,
+        initial_history=initial_history,
+        checkpointer=checkpointer,
     )
+    if checkpointer is not None:
+        # Surface the last in-flight write's failure here, not silently at
+        # interpreter exit — the run result should not claim durability the
+        # store never achieved.
+        checkpointer.wait()
     # Loss at the returned iterate (history is pre-update; see frank_wolfe.fit).
     # The plain sum over the row-sharded state is already the global loss, and
     # straggler weights never apply here: this is the true full-data F.
@@ -591,9 +756,43 @@ def fit_serial(
         cfg.comm, num_workers=1,
         use_pallas=cfg.use_pallas, interpret=cfg.interpret,
     )
+    state = ktask.init_state(jnp.asarray(x), jnp.asarray(y))
+    iterate, comm_state, start_t, initial_history = None, None, 0, None
+    if cfg.resume_from is not None:
+        snap = ckpt.restore_run(
+            cfg.resume_from, state_like=state, step=cfg.resume_step
+        )
+        _check_snapshot(snap, task, cfg)
+        state = jax.tree.map(jnp.asarray, snap.carry.state)
+        iterate = snap.unpack_iterate(
+            engine.resolve_max_rank(cfg.max_rank, cfg.num_epochs)
+        )
+        key = jnp.asarray(snap.carry.key)
+        start_t, initial_history = snap.t, snap.history
+        if (
+            int(snap.extra.get("num_workers", -1)) == 1
+            and snap.extra.get("comm") == reducer.spec
+        ):
+            comm_state = jax.tree.map(jnp.asarray, snap.carry.comm_state)
+        # else: default (fresh) reducer state — a sharded checkpoint's
+        # per-worker residuals don't transfer to the one-worker run, and a
+        # warm comm change starts its new encoding from scratch.
+        if _resume_complete(snap, cfg):
+            final_loss = float(jax.device_get(jax.jit(ktask.local_loss)(state)))
+            return DFWFitResult(
+                iterate=iterate, state=state, history=snap.history,
+                masks=None, final_loss=final_loss, epochs_run=snap.t,
+                stats={"segments_planned": 0, "segments_run": 0,
+                       "dispatches": 1, "compilations": 1, "host_syncs": 1},
+            )
+    checkpointer = _make_checkpointer(task, cfg, 1, reducer.spec)
+    if checkpointer is not None:
+        # As in `fit`: the dir is this run's timeline — drop steps past
+        # start_t (all of them, for a fresh run).
+        checkpointer.store.discard_after(start_t)
     res = frank_wolfe.fit(
         ktask,
-        ktask.init_state(jnp.asarray(x), jnp.asarray(y)),
+        state,
         mu=cfg.mu,
         num_epochs=cfg.num_epochs,
         key=key,
@@ -605,6 +804,11 @@ def fit_serial(
         gap_tol=cfg.gap_tol,
         block_epochs=cfg.block_epochs,
         mode=cfg.engine,
+        iterate=iterate,
+        comm_state=comm_state,
+        start_t=start_t,
+        initial_history=initial_history,
+        checkpointer=checkpointer,
     )
     return DFWFitResult(
         iterate=res.iterate, state=res.state, history=res.history, masks=None,
