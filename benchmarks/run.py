@@ -31,6 +31,7 @@ def main() -> None:
         power_accuracy,
         roofline,
         scaling,
+        serving_latency,
     )
 
     suites = {
@@ -51,6 +52,11 @@ def main() -> None:
         if args.fast else matrix_completion.run,
         "engine_overhead": (lambda: engine_bench.run(epochs=96, block=24))
         if args.fast else engine_bench.run,
+        # serving_latency keeps Table-1 sizes even in --fast: the gated
+        # record IS the rank=d/8 point at d=m=1024; only repetitions shrink.
+        "serving_latency": (
+            lambda: serving_latency.run(ranks=(16, 128), dispatches=15))
+        if args.fast else serving_latency.run,
         "thm2_power_accuracy": power_accuracy.run,
         "kernels": kernel_bench.run,
         "roofline": roofline.run,

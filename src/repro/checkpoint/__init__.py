@@ -2,6 +2,7 @@ from . import dfw
 from .dfw import (
     RunCheckpointer,
     RunSnapshot,
+    read_iterate_packed,
     read_run_extra,
     restore_run,
     run_extra,
@@ -14,6 +15,7 @@ __all__ = [
     "RunCheckpointer",
     "RunSnapshot",
     "dfw",
+    "read_iterate_packed",
     "read_run_extra",
     "restore_run",
     "run_extra",

@@ -235,6 +235,50 @@ def read_run_extra(
     return manifest["step"], manifest.get("extra", {})
 
 
+def read_iterate_packed(
+    store: Union[CheckpointStore, str, Path], step: Optional[int] = None
+) -> tuple:
+    """(step, packed_iterate, extra): load ONLY the live-rank-packed factored
+    iterate out of a run checkpoint — the serving path's restore.
+
+    A scorer needs the model, not the training run: task sufficient
+    information is O(n) (the sharded data residuals), while the packed
+    iterate is O(t(d+m)). This reads the manifest, selects exactly the
+    ``carry/iterate/*`` leaves by their recorded paths, and never touches
+    the task-state or history arrays on disk — so a serving process can
+    hot-swap models without holding (or even knowing the structure of) the
+    training state. The result is ``low_rank.pack_live`` output verbatim;
+    re-pad to any capacity with ``low_rank.unpack_live``.
+    """
+    if isinstance(store, (str, Path)):
+        store = CheckpointStore(store)
+    step, extra = read_run_extra(store, step)
+    fmt = extra.get("payload_format", -1)
+    if fmt != PAYLOAD_FORMAT:
+        raise ValueError(
+            f"checkpoint step {step} has payload format {fmt}; this build "
+            f"reads {PAYLOAD_FORMAT}"
+        )
+    import json
+
+    src = store.dir / f"step_{step:08d}"
+    manifest = json.loads((src / "manifest.json").read_text())
+    prefix = "carry/iterate/"
+    leaves = {
+        rec["path"][len(prefix):]: np.load(src / rec["file"])
+        for rec in manifest["leaves"]
+        if rec["path"].startswith(prefix)
+    }
+    missing = [k for k in low_rank.packed_like() if k not in leaves]
+    if missing:
+        raise ValueError(
+            f"checkpoint step {step} at {src} has no packed iterate leaves "
+            f"{missing} (paths {sorted(leaves)}); was it written by "
+            "RunCheckpointer.save_segment?"
+        )
+    return step, leaves, extra
+
+
 def restore_run(
     store: Union[CheckpointStore, str, Path],
     *,

@@ -9,9 +9,18 @@ The dry-run / roofline path uses the ref implementations so XLA's
 cost_analysis sees every FLOP (Pallas lowers to an opaque custom call on TPU);
 kernels are validated on CPU with interpret=True.
 """
-from . import flash_attention, mc_matvec, power_matvec, quantize, rank1_update, wkv6_chunk
+from . import (
+    factor_matvec,
+    flash_attention,
+    mc_matvec,
+    power_matvec,
+    quantize,
+    rank1_update,
+    wkv6_chunk,
+)
 
 __all__ = [
+    "factor_matvec",
     "flash_attention",
     "mc_matvec",
     "power_matvec",

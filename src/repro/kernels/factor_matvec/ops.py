@@ -1,0 +1,83 @@
+"""Public jit'd wrappers: padding, dispatch (Pallas on TPU / ref elsewhere).
+
+Same contract as the other kernel subpackages. Callers pass the raw factor
+triple and a request batch; rank/lane padding stays internal:
+
+* batch rows pad to ``block_b`` and output columns to ``block_o`` (zero
+  rows/columns, sliced off the result),
+* the rank axis pads to a sublane multiple with ``s == 0`` rows — exact
+  no-ops in both contractions (matching ``low_rank``'s invariant that rows
+  past the live count are zero),
+* the input-feature axis pads to a lane multiple with zero columns.
+
+``alpha`` (the factored iterate's running global scale) is folded into the
+``s`` operand here, so kernel and reference stay scale-free. A rank-0
+triple — a freshly initialized iterate, or ``pack_live`` of an untrained
+model — is well-defined: the score is exactly zero, computed without
+touching the kernel (Pallas cannot tile an empty operand).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _use_pallas(force: bool | None) -> bool:
+    if force is not None:
+        return force
+    return jax.default_backend() == "tpu"
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_b", "block_o", "use_pallas", "interpret"),
+)
+def factor_matvec(
+    x: jax.Array,
+    a: jax.Array,
+    s: jax.Array,
+    b: jax.Array,
+    *,
+    alpha: jax.Array | float = 1.0,
+    block_b: int = 128,
+    block_o: int = 256,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Score a request batch against a factor triple:
+    ``alpha * ((X @ A^T) * s) @ B`` -> (bt, n_out) f32.
+
+    X:(bt, n_in), A:(r, n_in), s:(r,), B:(r, n_out). Scoring the factored
+    iterate ``W = alpha * A^T diag(s) B`` in either direction is a choice of
+    operand order: ``X @ W`` is ``factor_matvec(x, a, s, b)`` (A = U row
+    factors) and ``X @ W^T`` is ``factor_matvec(x, b, s, a)``.
+    """
+    bt, n_in = x.shape
+    r = a.shape[0]
+    n_out = b.shape[1]
+    se = (jnp.asarray(alpha, jnp.float32) * s.astype(jnp.float32)).reshape(r)
+    if r == 0:
+        return jnp.zeros((bt, n_out), jnp.float32)
+    if not _use_pallas(use_pallas) and not interpret:
+        return ref.factor_matvec(x, a, se, b)
+    xp = _pad_axis(_pad_axis(x, 0, block_b), 1, 128)
+    ap = _pad_axis(_pad_axis(a, 0, 8), 1, 128)
+    sp = _pad_axis(se, 0, 8).reshape(-1, 1)
+    bp = _pad_axis(_pad_axis(b, 0, 8), 1, block_o)
+    out = kernel.factor_matvec(
+        xp, ap, sp, bp, block_b=block_b, block_o=block_o, interpret=interpret
+    )
+    return out[:bt, :n_out]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the factor-form scoring kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def factor_matvec(
+    x: jax.Array, a: jax.Array, s: jax.Array, b: jax.Array
+) -> jax.Array:
+    """((X @ A^T) * s) @ B with f32 accumulation; s:(r,) or (r, 1).
+
+    X:(bt, n_in), A:(r, n_in), B:(r, n_out) -> (bt, n_out) f32 — the exact
+    contraction order the fused kernel implements (rank-r intermediate,
+    never the dense n_in x n_out product).
+    """
+    s = s.reshape(1, a.shape[0])
+    t = jnp.dot(x, a.T, preferred_element_type=jnp.float32) * s
+    return jnp.dot(t, b, preferred_element_type=jnp.float32)
+
+
+def dense_matvec(
+    x: jax.Array, a: jax.Array, s: jax.Array, b: jax.Array
+) -> jax.Array:
+    """The materialized-matrix baseline: X @ (A^T diag(s) B) — O(n_in * n_out)
+    memory and FLOPs. Exists so tests and the serving benchmark can compare
+    factor-form scoring against exactly the computation it avoids."""
+    s = s.reshape(a.shape[0])
+    w = jnp.einsum("k,ki,kj->ij", s, a.astype(jnp.float32), b.astype(jnp.float32))
+    return jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)

@@ -1,0 +1,29 @@
+"""Factor-form serving: score requests straight from the factored iterate.
+
+``engine.ServingEngine`` — padded static batches, rank-bucketed AOT
+executables, checkpoint hot-swap without recompiles or dropped batches.
+``batcher.MicroBatcher`` — accumulate single requests into engine dispatches.
+"""
+from . import batcher, engine
+from .batcher import MicroBatcher, Ticket
+from .engine import (
+    Model,
+    PendingScores,
+    ServeConfig,
+    ServingEngine,
+    rank_bucket,
+    verify_factor_kernels,
+)
+
+__all__ = [
+    "MicroBatcher",
+    "Model",
+    "PendingScores",
+    "ServeConfig",
+    "ServingEngine",
+    "Ticket",
+    "batcher",
+    "engine",
+    "rank_bucket",
+    "verify_factor_kernels",
+]

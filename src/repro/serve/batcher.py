@@ -1,0 +1,117 @@
+"""Request micro-batching for the factor-form serving engine.
+
+Single requests are the worst case for an accelerator scorer — one row of a
+padded batch does the same device work as a full one. The ``MicroBatcher``
+accumulates individual requests into the engine's padded static batch and
+dispatches them as ONE ``score_async`` call, so per-request cost amortizes
+toward ``1/max_batch`` of a dispatch while every caller still gets an
+individual, independently blockable ``Ticket``.
+
+Dispatch policy is deliberately explicit rather than timer-driven: a batch
+flushes when it reaches ``flush_at`` rows (auto) or when the caller says so
+(``flush()``, typically at an event-loop tick or queue-empty edge). Tickets
+are model-version-stamped at *dispatch* time, which is what makes hot-swap
+semantics testable: requests flushed before a swap score against the old
+model, requests flushed after score against the new one, and a ticket can
+never observe a half-swapped state.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from .engine import PendingScores, ServingEngine
+
+
+class Ticket:
+    """One submitted request's future score row.
+
+    ``result()`` blocks (flushing the owning batcher first if this request
+    is still queued — a lone ticket never deadlocks waiting for neighbors
+    that may never arrive). ``version``/``step`` identify the model that
+    scored it, available once dispatched.
+    """
+
+    __slots__ = ("_batcher", "_pending", "_row")
+
+    def __init__(self, batcher: "MicroBatcher"):
+        self._batcher = batcher
+        self._pending: Optional[PendingScores] = None
+        self._row = -1
+
+    def _attach(self, pending: PendingScores, row: int) -> None:
+        self._pending = pending
+        self._row = row
+
+    @property
+    def dispatched(self) -> bool:
+        return self._pending is not None
+
+    @property
+    def version(self) -> int:
+        if self._pending is None:
+            raise RuntimeError("ticket not dispatched yet; flush() first")
+        return self._pending.version
+
+    @property
+    def step(self):
+        if self._pending is None:
+            raise RuntimeError("ticket not dispatched yet; flush() first")
+        return self._pending.step
+
+    def result(self) -> np.ndarray:
+        if self._pending is None:
+            self._batcher.flush()
+        assert self._pending is not None  # flush attaches every queued ticket
+        return self._pending.block()[self._row]
+
+
+class MicroBatcher:
+    """Accumulate single requests into padded engine dispatches.
+
+    ``flush_at`` defaults to the engine's ``max_batch`` (maximum
+    amortization); set it lower to trade fill for latency. One batcher
+    fronts one engine; submissions after a hot-swap simply land in the next
+    dispatch against the new model.
+    """
+
+    def __init__(self, engine: ServingEngine, *, flush_at: Optional[int] = None):
+        self.engine = engine
+        self.flush_at = engine.cfg.max_batch if flush_at is None else int(flush_at)
+        if not 1 <= self.flush_at <= engine.cfg.max_batch:
+            raise ValueError(
+                f"flush_at={self.flush_at}: must be in [1, max_batch="
+                f"{engine.cfg.max_batch}]"
+            )
+        self._rows: List[np.ndarray] = []
+        self._tickets: List[Ticket] = []
+
+    @property
+    def pending_count(self) -> int:
+        return len(self._rows)
+
+    def submit(self, x) -> Ticket:
+        """Queue one (n_in,) request; auto-flushes at ``flush_at`` rows."""
+        row = np.asarray(x, np.float32)
+        if row.ndim != 1 or row.shape[0] != self.engine.n_in:
+            raise ValueError(
+                f"submit takes one ({self.engine.n_in},) request; got shape "
+                f"{row.shape} (use engine.score for whole batches)"
+            )
+        ticket = Ticket(self)
+        self._rows.append(row)
+        self._tickets.append(ticket)
+        if len(self._rows) >= self.flush_at:
+            self.flush()
+        return ticket
+
+    def flush(self) -> Optional[PendingScores]:
+        """Dispatch everything queued as one padded batch (no-op if empty)."""
+        if not self._rows:
+            return None
+        pending = self.engine.score_async(np.stack(self._rows))
+        for row, ticket in enumerate(self._tickets):
+            ticket._attach(pending, row)
+        self._rows, self._tickets = [], []
+        return pending

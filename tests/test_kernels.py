@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import (
+    factor_matvec,
     flash_attention,
     mc_matvec,
     power_matvec,
@@ -79,6 +80,65 @@ def test_mc_coo_matvec_matches_dense():
     np.testing.assert_allclose(
         np.asarray(mc_matvec.ref.matvec(rows, cols, vals, v, d)),
         g @ np.asarray(v), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bt,n_in,r,n_out", [
+    (128, 256, 8, 256),   # block-aligned
+    (130, 300, 7, 65),    # every axis off its block/sublane multiple
+    (1, 7, 1, 3),         # single tiny request
+    (33, 129, 12, 257),   # one past block boundaries
+])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_factor_matvec_kernel(bt, n_in, r, n_out, dt):
+    """Fused factor-scoring kernel (interpret) vs the jnp oracle vs the
+    materialized dense product, across non-multiple-of-block shapes."""
+    x = (jax.random.normal(KEY, (bt, n_in)) / np.sqrt(n_in)).astype(dt)
+    a = jax.random.normal(jax.random.fold_in(KEY, 40), (r, n_in)).astype(dt)
+    s = jax.random.normal(jax.random.fold_in(KEY, 41), (r,))
+    b = jax.random.normal(jax.random.fold_in(KEY, 42), (r, n_out)).astype(dt)
+    got = factor_matvec.factor_matvec(
+        x, a, s, b, alpha=0.7, block_b=32, block_o=64, interpret=True)
+    assert got.shape == (bt, n_out) and got.dtype == jnp.float32
+    want_ref = factor_matvec.ref.factor_matvec(x, a, 0.7 * s, b)
+    want_dense = factor_matvec.ref.dense_matvec(x, a, 0.7 * s, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_ref), **_tol(dt))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_dense),
+                               **(_tol(dt) if dt == jnp.bfloat16
+                                  else dict(rtol=1e-4, atol=1e-4)))
+
+
+def test_factor_matvec_rank_zero_and_dispatch():
+    """Rank 0 (untrained iterate) scores exactly zero without entering the
+    kernel, and the off-TPU default path (use_pallas=None on CPU) agrees
+    with the interpret-mode kernel."""
+    x = jax.random.normal(KEY, (9, 50))
+    z = factor_matvec.factor_matvec(
+        x, jnp.zeros((0, 50)), jnp.zeros((0,)), jnp.zeros((0, 30)), interpret=True)
+    assert z.shape == (9, 30) and not np.any(np.asarray(z))
+    a = jax.random.normal(jax.random.fold_in(KEY, 43), (5, 50))
+    s = jax.random.normal(jax.random.fold_in(KEY, 44), (5,))
+    b = jax.random.normal(jax.random.fold_in(KEY, 45), (5, 30))
+    via_ref = factor_matvec.factor_matvec(x, a, s, b, alpha=1.3)
+    via_kernel = factor_matvec.factor_matvec(
+        x, a, s, b, alpha=1.3, block_b=32, block_o=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(via_ref), np.asarray(via_kernel),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_factor_matvec_zero_tail_rows_are_exact_noops():
+    """The low_rank invariant the serving engine relies on: capacity rows
+    with s == 0 change nothing, so bucket padding is free."""
+    x = jax.random.normal(KEY, (6, 40))
+    a = jax.random.normal(jax.random.fold_in(KEY, 46), (3, 40))
+    s = jax.random.normal(jax.random.fold_in(KEY, 47), (3,))
+    b = jax.random.normal(jax.random.fold_in(KEY, 48), (3, 20))
+    pad = lambda t, rows: jnp.concatenate([t, jnp.zeros((rows,) + t.shape[1:])])
+    live = factor_matvec.factor_matvec(x, a, s, b, interpret=True,
+                                       block_b=32, block_o=32)
+    padded = factor_matvec.factor_matvec(
+        x, pad(a, 13), pad(s, 13), pad(b, 13), interpret=True,
+        block_b=32, block_o=32)
+    np.testing.assert_array_equal(np.asarray(live), np.asarray(padded))
 
 
 @pytest.mark.parametrize("n,m", [(128, 128), (100, 90), (33, 257)])

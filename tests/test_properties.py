@@ -83,6 +83,61 @@ def test_factored_matvec_agrees_with_dense(d, m, seed):
         low_rank.right_multiply(it, xm), xm @ w, rtol=2e-3, atol=2e-4)
 
 
+@given(d=dims, m=dims, max_rank=st.integers(1, 8), live=st.integers(0, 8),
+       extra=st.integers(0, 5), seed=seeds)
+def test_pack_unpack_roundtrip_at_any_live_rank(d, m, max_rank, live, extra, seed):
+    """pack_live -> unpack_live is bit-exact at every live rank — empty,
+    partial, and full capacity — and re-pads to any larger capacity."""
+    live = min(live, max_rank)
+    it = low_rank.init(max_rank, d, m)
+    for i in range(live):
+        u = _rand(seed + 2 * i, (d,))
+        u = u / jnp.linalg.norm(u)
+        v = _rand(seed + 2 * i + 1, (m,))
+        v = v / jnp.linalg.norm(v)
+        it = low_rank.fw_update(it, u, v, jnp.float32(0.4), 1.5)
+    packed = low_rank.pack_live(it)
+    assert packed["u"].shape == (live, d) and packed["s"].shape == (live,)
+    back = low_rank.unpack_live(packed, max_rank)
+    for got, want in zip(back, it):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # re-pad to a larger capacity: same matrix, zero tail rows
+    wide = low_rank.unpack_live(packed, max_rank + extra)
+    np.testing.assert_array_equal(
+        np.asarray(low_rank.materialize(wide)),
+        np.asarray(low_rank.materialize(it)))
+    assert not np.any(np.asarray(wide.u)[live:])
+    if live > max_rank - 1 and extra == 0 and live > 0:
+        with pytest.raises(ValueError, match="max_rank"):
+            low_rank.unpack_live(packed, live - 1)
+
+
+@given(d=dims, m=dims, bt=st.integers(1, 9), live=st.integers(0, 5),
+       transpose=st.booleans(), dt=st.sampled_from(["float32", "bfloat16"]),
+       seed=seeds)
+def test_factor_scoring_matches_dense_oracle(d, m, bt, live, transpose, dt, seed):
+    """Factor-form scoring (the serving hot path) == X @ (U^T diag(s) V) for
+    random ranks, batch shapes, dtypes, and both scoring directions."""
+    from repro.kernels import factor_matvec
+
+    dtype = jnp.bfloat16 if dt == "bfloat16" else jnp.float32
+    it = low_rank.init(max(live, 1), d, m)
+    for i in range(live):
+        u = _rand(seed + 3 * i, (d,))
+        u = u / jnp.linalg.norm(u)
+        v = _rand(seed + 3 * i + 1, (m,))
+        v = v / jnp.linalg.norm(v)
+        it = low_rank.fw_update(it, u, v, jnp.float32(0.35), 2.0)
+    w = np.asarray(low_rank.materialize(it), np.float32)
+    x = _rand(seed + 99, (bt, m if transpose else d)).astype(dtype)
+    a, b = (it.v, it.u) if transpose else (it.u, it.v)
+    got = factor_matvec.factor_matvec(
+        x, a.astype(dtype), it.s, b.astype(dtype), alpha=it.alpha)
+    want = np.asarray(x, np.float32) @ (w.T if transpose else w)
+    tol = dict(rtol=5e-2, atol=5e-2) if dt == "bfloat16" else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got), want, **tol)
+
+
 # ---------------------------------------------------------------------------
 # Task operator invariants (implicit gradient == dense gradient)
 # ---------------------------------------------------------------------------

@@ -1,6 +1,10 @@
 """End-to-end behaviour tests: training loop learns, serving generates,
 DFW-TRACE head training on backbone features works (the paper's pipeline)."""
+import os
+import subprocess
+import sys
 import tempfile
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +41,25 @@ def test_serve_generates_tokens():
     assert out.shape == (2, 8)
     cfg = get_config("rwkv6_7b", smoke=True)
     assert out.min() >= 0 and out.max() < cfg.vocab_size
+
+
+@pytest.mark.slow  # trains -> checkpoints -> serves -> hot-swaps end to end
+def test_serve_batched_example_runs():
+    """examples/serve_batched.py is the factor-form serving walkthrough; it
+    self-asserts (oracle agreement, zero-recompile swap, old/new isolation)
+    and must stay runnable — it is the serving quickstart the README points
+    at."""
+    root = Path(__file__).resolve().parent.parent
+    env = {**os.environ, "PYTHONPATH": str(root / "src")}
+    res = subprocess.run(
+        [sys.executable, str(root / "examples" / "serve_batched.py")],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert res.returncode == 0, (
+        f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr[-4000:]}"
+    )
+    assert "train-and-serve demo OK" in res.stdout
+    assert "zero recompiles" in res.stdout
 
 
 def test_dfw_head_on_backbone_features():
