@@ -2,7 +2,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-smoke bench-check lint
+.PHONY: test test-fast bench-smoke bench-check lint analyze
 
 # Tier-1 verify (see ROADMAP.md): full pytest suite, stop at first failure.
 test:
@@ -22,6 +22,14 @@ bench-smoke:
 # Compare the smoke record against the checked-in baselines (the CI gate).
 bench-check:
 	$(PYTHON) -m benchmarks.check_regression BENCH_smoke.json
+
+# Repo-specific correctness gate (docs/ANALYSIS.md): tier 1 is the REPxxx
+# AST lint (fails on findings not frozen in tools/repro_lint_baseline.json),
+# tier 2 compiles the layer-declared HLO/dispatch contracts on 8 fake CPU
+# devices and asserts them against the emitted HLO + runtime counters.
+analyze:
+	$(PYTHON) tools/repro_lint.py
+	$(PYTHON) tools/repro_contracts.py
 
 # Syntax sweep; uses ruff/flake8 when available, byte-compilation otherwise.
 lint:

@@ -44,7 +44,7 @@ def analytic(n_workers: int, d: int, m: int, k: int):
 
 def expect_epoch_bytes(comm: str, d: int, m: int, k: int, n_workers: int) -> int:
     """Analytic per-device wire bytes of one epoch (ring all-reduce 2x,
-    all-gather 1x — the same conventions as launch/hlo_analysis): K vector
+    all-gather 1x — the same conventions as repro.analysis.hlo): K vector
     exchanges of (d,) and (m,) through the reducer plus the four exact f32
     scalar psums (loss, <W,grad>, line-search numerator/denominator)."""
     from repro.comm import make_reducer
@@ -62,7 +62,8 @@ import sys, json
 sys.path.insert(0, "SRC")
 import jax, jax.numpy as jnp
 from repro.core import tasks, low_rank, frank_wolfe
-from repro.launch import dfw, hlo_analysis
+from repro.analysis import hlo as hlo_analysis
+from repro.launch import dfw
 from repro import comm as comm_lib
 
 P = json.loads('PARAMS')

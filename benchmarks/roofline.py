@@ -9,7 +9,7 @@ Per (arch x shape x mesh) cell, from experiments/dryrun/*.json:
                     per assignment)
 
 Sources: FLOPs and dot-bytes from the trip-count-aware HLO walker
-(launch/hlo_analysis.py — XLA's cost_analysis visits scan bodies once, so it
+(src/repro/analysis/hlo.py — XLA's cost_analysis visits scan bodies once, so it
 is NOT usable directly); collective bytes from the partitioned HLO with ring
 factors (all-reduce 2x). MODEL_FLOPS = 6ND (train) / 2ND (inference), MoE
 active-params, embeddings + attention excluded (standard convention).

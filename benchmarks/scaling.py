@@ -25,7 +25,7 @@ sys.path.insert(0, "SRC")
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.core import tasks, frank_wolfe, low_rank
-from repro.launch import hlo_analysis
+from repro.analysis import hlo as hlo_analysis
 from repro.compat import shard_map_compat
 
 NDEVN = __NDEV__

@@ -13,7 +13,6 @@ Run:  PYTHONPATH=src python examples/resume_dfw.py
 """
 import json
 import os
-import signal
 import subprocess
 import sys
 import tempfile

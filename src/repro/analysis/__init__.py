@@ -1,0 +1,23 @@
+"""Correctness tooling: repo-specific static lint + declarative contracts.
+
+Two tiers, both wired into ``make analyze`` and CI:
+
+- ``analysis.lint`` — AST rules (``REP001``–``REP005``) encoding the repo's
+  structural invariants: collectives only through ``repro.comm``, no
+  implicit host syncs in hot paths, kernel packages ship the
+  kernel/ops/ref trio, jit boundaries don't recompile per call. CLI:
+  ``tools/repro_lint.py`` (baseline-gated — existing debt is frozen in
+  ``tools/repro_lint_baseline.json``, new violations fail).
+- ``analysis.contracts`` — declarative HLO/dispatch ``Contract``s that the
+  engine, power-method, and serving layers declare for themselves and the
+  test suites + ``tools/repro_contracts.py`` verify against compiled HLO
+  and runtime counters.
+- ``analysis.hlo`` — the post-SPMD HLO walker both tiers measure with
+  (moved from ``launch/hlo_analysis``; compat re-export kept).
+
+See ``docs/ANALYSIS.md`` for the rule catalog and how to add a rule or a
+contract.
+"""
+from . import contracts, hlo, lint
+
+__all__ = ["contracts", "hlo", "lint"]

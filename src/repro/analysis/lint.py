@@ -1,0 +1,543 @@
+"""Repo-specific static lint: the ``REPxxx`` rules.
+
+DFW-Trace's efficiency claims are *invariants of the code's shape*, not just
+of its outputs: vector collectives only ever go through the ``repro.comm``
+Reducer layer (so every driver inherits compressed/exact encodings and the
+wire-byte accounting), device values never leak to host implicitly (the
+engine's dispatch/sync pins rely on every transfer being an explicit
+``jax.device_get``), every Pallas kernel ships with a reference fallback,
+and jitted entry points don't recompile per call. Generic linters cannot see
+any of this — these rules encode it, so a regression is caught at lint time
+in *any* file, not only where a test happens to pin it.
+
+Rules (see ``docs/ANALYSIS.md`` for the full catalog and rationale):
+
+- **REP001** raw ``jax.lax`` collective (``psum``/``all_gather``/…) outside
+  ``repro/comm`` — everything else must go through the Reducer contract.
+- **REP002** implicit host-sync idiom (``float()``/``bool()``/``.item()``/
+  ``np.asarray`` on a computed value) in a hot-path module without an
+  explicit ``jax.device_get`` boundary in the same expression.
+- **REP003** a ``kernels/<name>/`` package missing the kernel/ops/ref trio,
+  or whose ``ops.py`` does not route to the reference off-TPU.
+- **REP004** a jitted function that Python-branches on a parameter not
+  declared in ``static_argnames``/``static_argnums`` (recompile hazard —
+  the branch re-traces on every new value).
+- **REP005** ``print``/f-string on a traced value inside a jitted function
+  (stale debug output at best, a tracer leak at worst; use
+  ``jax.debug.print``).
+
+**Suppression.** A finding is silenced by an inline justification comment on
+the flagged line — ``# REP002-ok: <why this one is intentional>`` — or by an
+entry in the checked-in baseline (``tools/repro_lint_baseline.json``), which
+freezes *existing* debt without hiding new violations. Baseline entries are
+keyed by (rule, file, source-line text), not line numbers, so unrelated
+edits don't churn them; the CLI (``tools/repro_lint.py``) fails only on
+findings not covered by either mechanism.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Findings, rules, suppression
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation. ``snippet`` (the stripped source line) is part of
+    the identity used for baseline matching — stable under line-number churn.
+    """
+
+    code: str
+    path: str  # posix path relative to the lint root
+    line: int  # 1-indexed
+    message: str
+    snippet: str
+
+    @property
+    def fingerprint(self) -> Tuple[str, str, str]:
+        return (self.code, self.path, self.snippet)
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    summary: str
+    check: Callable[["FileContext"], Iterator[Finding]]
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def _rule(code: str, summary: str):
+    def deco(fn):
+        RULES[code] = Rule(code, summary, fn)
+        return fn
+
+    return deco
+
+
+_ALLOW_RE = re.compile(r"#\s*(REP\d{3})-ok:\s*\S")
+
+
+class FileContext:
+    """Parsed view of one file handed to every rule."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path  # posix, relative to lint root
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text)
+        self.parts = tuple(Path(path).parts)
+        self._jitted: Optional[List[Tuple[ast.AST, frozenset]]] = None
+
+    def snippet(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def allowed(self, code: str, line: int) -> bool:
+        """Inline suppression: ``# REPxxx-ok: <reason>`` on the flagged line,
+        or alone on the line above when the flagged line has no room. The
+        reason is mandatory — a bare marker does not suppress."""
+        for src in (self.snippet(line), self.snippet(line - 1)):
+            m = _ALLOW_RE.search(src)
+            if m and m.group(1) == code:
+                return True
+        return False
+
+    def finding(self, code: str, node_or_line, message: str) -> Optional[Finding]:
+        line = getattr(node_or_line, "lineno", node_or_line)
+        if self.allowed(code, line):
+            return None
+        return Finding(code, self.path, line, message, self.snippet(line))
+
+    # -- shared jit-decoration analysis (REP004 / REP005) -------------------
+    def jitted_functions(self) -> List[Tuple[ast.AST, frozenset]]:
+        """Function defs decorated with ``jax.jit`` (directly or through
+        ``functools.partial(jax.jit, ...)``), paired with the set of
+        parameter names declared static."""
+        if self._jitted is None:
+            self._jitted = []
+            for node in ast.walk(self.tree):
+                if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                for deco in node.decorator_list:
+                    static = _jit_static_params(deco, node)
+                    if static is not None:
+                        self._jitted.append((node, static))
+                        break
+        return self._jitted
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    if isinstance(node, ast.Attribute) and node.attr == "jit":
+        return True
+    return isinstance(node, ast.Name) and node.id == "jit"
+
+
+def _param_names(fn: ast.AST) -> List[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+
+
+def _jit_static_params(deco: ast.AST, fn: ast.AST) -> Optional[frozenset]:
+    """If ``deco`` is a jit decoration, the static parameter names; else
+    None. Handles ``@jax.jit`` and ``@[functools.]partial(jax.jit, ...)``."""
+    if _is_jax_jit(deco):
+        return frozenset()
+    if not isinstance(deco, ast.Call):
+        return None
+    callee = deco.func
+    is_partial = (
+        isinstance(callee, ast.Name) and callee.id == "partial"
+    ) or (isinstance(callee, ast.Attribute) and callee.attr == "partial")
+    if is_partial and deco.args and _is_jax_jit(deco.args[0]):
+        kwargs = deco.keywords
+    elif _is_jax_jit(callee):  # @jax.jit(static_argnames=...)
+        kwargs = deco.keywords
+    else:
+        return None
+    static: set = set()
+    params = _param_names(fn)
+    for kw in kwargs:
+        if kw.arg == "static_argnames":
+            for c in ast.walk(kw.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                    static.add(c.value)
+        elif kw.arg == "static_argnums":
+            for c in ast.walk(kw.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, int):
+                    if 0 <= c.value < len(params):
+                        static.add(params[c.value])
+    return frozenset(static)
+
+
+def _names_in(node: ast.AST) -> set:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _contains_device_get(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and n.attr == "device_get":
+            return True
+        if isinstance(n, ast.Name) and n.id == "device_get":
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# REP001 — raw collectives outside repro/comm
+# ---------------------------------------------------------------------------
+
+_COLLECTIVE_NAMES = frozenset(
+    {"psum", "psum_scatter", "pmax", "pmin", "pmean", "all_gather",
+     "all_to_all", "ppermute", "pshuffle"}
+)
+
+
+def _in_comm_layer(ctx: FileContext) -> bool:
+    return "comm" in ctx.parts
+
+
+@_rule("REP001", "raw jax.lax collective outside the repro/comm Reducer layer")
+def _check_rep001(ctx: FileContext) -> Iterator[Finding]:
+    if _in_comm_layer(ctx):
+        return
+    for node in ast.walk(ctx.tree):
+        name = None
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+            fn = node.func
+            if fn.attr in _COLLECTIVE_NAMES:
+                root = fn.value
+                if (isinstance(root, ast.Name) and root.id == "lax") or (
+                    isinstance(root, ast.Attribute) and root.attr == "lax"
+                ):
+                    name = fn.attr
+        elif isinstance(node, ast.ImportFrom) and node.module and (
+            node.module == "jax.lax" or node.module.endswith(".lax")
+        ):
+            hit = [a.name for a in node.names if a.name in _COLLECTIVE_NAMES]
+            if hit:
+                name = "/".join(hit)
+        if name is None:
+            continue
+        f = ctx.finding(
+            "REP001", node,
+            f"raw collective `{name}` outside repro/comm — route it through "
+            "a comm.Reducer (or comm.base.psum/pmax) so every driver "
+            "inherits the encoding and wire-byte accounting",
+        )
+        if f:
+            yield f
+
+
+# ---------------------------------------------------------------------------
+# REP002 — implicit host syncs in hot paths
+# ---------------------------------------------------------------------------
+
+_HOT_DIRS = frozenset({"core", "serve", "kernels", "comm"})
+_HOT_FILES = frozenset({"dfw.py"})
+_NP_ALIASES = frozenset({"np", "numpy", "onp"})
+
+
+def _in_hot_path(ctx: FileContext) -> bool:
+    return bool(_HOT_DIRS & set(ctx.parts[:-1])) or ctx.parts[-1] in _HOT_FILES
+
+
+def _is_computed(node: ast.AST) -> bool:
+    """Anything but a literal/bare name — the shapes float()/bool() host
+    pulls hide behind (attribute chains, subscripts, calls, arithmetic)."""
+    return not isinstance(node, (ast.Constant, ast.Name))
+
+
+@_rule("REP002", "implicit device->host sync in a hot path (no device_get boundary)")
+def _check_rep002(ctx: FileContext) -> Iterator[Finding]:
+    if not _in_hot_path(ctx):
+        return
+    # A function that performs an explicit jax.device_get established its
+    # host boundary: float()/np.asarray on the fetched values afterwards is
+    # host-side work, not an implicit sync. Findings are suppressed inside
+    # such functions; the rule bites where no explicit boundary exists.
+    boundary_fns = [
+        fn
+        for fn in ast.walk(ctx.tree)
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+        and _contains_device_get(fn)
+    ]
+
+    def inside_boundary(node: ast.AST) -> bool:
+        return any(
+            fn.lineno <= node.lineno <= max(
+                (n.lineno for n in ast.walk(fn) if hasattr(n, "lineno")),
+                default=fn.lineno,
+            )
+            for fn in boundary_fns
+        )
+
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        msg = None
+        if isinstance(node.func, ast.Name) and node.func.id in ("float", "bool"):
+            if len(node.args) == 1 and _is_computed(node.args[0]):
+                msg = (
+                    f"`{node.func.id}(...)` on a computed value blocks on an "
+                    "implicit device->host transfer"
+                )
+        elif isinstance(node.func, ast.Attribute) and node.func.attr == "item":
+            if not node.args:
+                msg = "`.item()` blocks on an implicit device->host transfer"
+        elif (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr == "asarray"
+            and isinstance(node.func.value, ast.Name)
+            and node.func.value.id in _NP_ALIASES
+        ):
+            msg = (
+                "`np.asarray(...)` on a device value is an implicit "
+                "device->host transfer"
+            )
+        if msg is None or _contains_device_get(node) or inside_boundary(node):
+            continue
+        f = ctx.finding(
+            "REP002", node,
+            msg + "; fetch through an explicit jax.device_get boundary (or "
+            "justify with `# REP002-ok: ...` if the value is host data)",
+        )
+        if f:
+            yield f
+
+
+# ---------------------------------------------------------------------------
+# REP004 — recompilation hazards at jit boundaries
+# ---------------------------------------------------------------------------
+
+
+@_rule("REP004", "jitted function Python-branches on a non-static parameter")
+def _check_rep004(ctx: FileContext) -> Iterator[Finding]:
+    for fn, static in ctx.jitted_functions():
+        params = set(_param_names(fn)) - static
+        if not params:
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                hit = sorted(_names_in(node.test) & params)
+                if hit:
+                    f = ctx.finding(
+                        "REP004", node,
+                        f"`{fn.name}` is jitted but branches on parameter(s) "
+                        f"{', '.join(hit)} not in static_argnames — every "
+                        "new value re-traces (recompile hazard); declare "
+                        "them static or branch with lax.cond",
+                    )
+                    if f:
+                        yield f
+
+
+# ---------------------------------------------------------------------------
+# REP005 — print / f-string on traced values inside jit
+# ---------------------------------------------------------------------------
+
+
+@_rule("REP005", "print/f-string on a traced value inside a jitted function")
+def _check_rep005(ctx: FileContext) -> Iterator[Finding]:
+    for fn, static in ctx.jitted_functions():
+        traced = set(_param_names(fn)) - static
+        for node in ast.walk(fn):
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "print"
+            ):
+                f = ctx.finding(
+                    "REP005", node,
+                    f"`print` inside jitted `{fn.name}` runs once at trace "
+                    "time, not per call — use jax.debug.print",
+                )
+                if f:
+                    yield f
+            elif isinstance(node, ast.JoinedStr):
+                hit = sorted(
+                    n
+                    for v in node.values
+                    if isinstance(v, ast.FormattedValue)
+                    for n in _names_in(v.value) & traced
+                )
+                if hit:
+                    f = ctx.finding(
+                        "REP005", node,
+                        f"f-string in jitted `{fn.name}` formats traced "
+                        f"parameter(s) {', '.join(hit)} — this stringifies "
+                        "the tracer at trace time, not the runtime value",
+                    )
+                    if f:
+                        yield f
+
+
+# ---------------------------------------------------------------------------
+# REP003 — kernel package trio (project-level rule)
+# ---------------------------------------------------------------------------
+
+_REP003_SUMMARY = "kernels/<name>/ must ship kernel.py + ops.py + ref.py, ops routing to ref off-TPU"
+
+
+def check_kernel_trios(files: Iterable[Path], root: Path) -> Iterator[Finding]:
+    """Group the scanned files by ``.../kernels/<name>/`` package and check
+    each ships the kernel/ops/ref trio with ops gating on the backend."""
+    by_pkg: Dict[Path, set] = {}
+    for f in files:
+        parts = f.parts
+        if "kernels" in parts[:-1]:
+            pkg = f.parent
+            if pkg.name != "kernels":  # a kernels/<name>/ package, not the root
+                by_pkg.setdefault(pkg, set()).add(f.name)
+    for pkg, names in sorted(by_pkg.items()):
+        rel = pkg.relative_to(root).as_posix()
+        missing = sorted({"kernel.py", "ops.py", "ref.py"} - names)
+        if missing:
+            yield Finding(
+                "REP003", rel, 1,
+                f"kernel package is missing {', '.join(missing)} — every "
+                "kernel ships the kernel/ops/ref trio so non-TPU backends "
+                "and the parity tests always have a reference path",
+                pkg.name,
+            )
+            continue
+        ops = (pkg / "ops.py").read_text()
+        routes_ref = re.search(r"\bref\s*\.|import\s+ref\b", ops)
+        gates = ("use_pallas" in ops) or ("default_backend" in ops)
+        if not (routes_ref and gates):
+            yield Finding(
+                "REP003", f"{rel}/ops.py", 1,
+                "ops.py must dispatch to the ref implementation off-TPU "
+                "(a `use_pallas`/`default_backend` gate falling back to "
+                "`ref.*`) — found no such routing",
+                "ops.py",
+            )
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def lint_file(path: Path, root: Path) -> List[Finding]:
+    rel = path.relative_to(root).as_posix()
+    try:
+        ctx = FileContext(rel, path.read_text())
+    except SyntaxError as e:  # surfaced as a finding, not a crash
+        return [Finding("REP000", rel, e.lineno or 1, f"syntax error: {e.msg}", "")]
+    out: List[Finding] = []
+    for rule in RULES.values():
+        out.extend(rule.check(ctx))
+    return out
+
+
+def lint_paths(paths: Sequence[Path], root: Optional[Path] = None) -> List[Finding]:
+    """Lint every ``.py`` file under ``paths``; findings carry posix paths
+    relative to ``root`` (default: the common parent, so fixture trees in
+    tests report stable relative paths)."""
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p).resolve()
+        if p.is_dir():
+            files.extend(
+                f for f in sorted(p.rglob("*.py")) if "__pycache__" not in f.parts
+            )
+        else:
+            files.append(p)
+    if root is None:
+        root = Path(__file__).resolve().parents[3]  # repo root (src/repro/analysis/..)
+    root = Path(root).resolve()
+    findings: List[Finding] = []
+    for f in files:
+        findings.extend(lint_file(f, root))
+    findings.extend(check_kernel_trios(files, root))
+    findings.sort(key=lambda f: (f.path, f.line, f.code))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Baseline: freeze existing debt, fail on anything new
+# ---------------------------------------------------------------------------
+
+BASELINE_VERSION = 1
+
+
+def load_baseline(path: Path) -> Dict[Tuple[str, str, str], dict]:
+    """Baseline entries keyed by fingerprint. Missing file = empty baseline."""
+    if not Path(path).exists():
+        return {}
+    data = json.loads(Path(path).read_text())
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(
+            f"baseline {path}: version {data.get('version')!r} != "
+            f"{BASELINE_VERSION} — regenerate with --update-baseline"
+        )
+    out = {}
+    for e in data["entries"]:
+        out[(e["code"], e["path"], e["snippet"])] = e
+    return out
+
+
+def diff_baseline(
+    findings: Sequence[Finding], baseline: Dict[Tuple[str, str, str], dict]
+) -> Tuple[List[Finding], List[dict]]:
+    """(new_findings, stale_entries): a finding is *new* when its fingerprint
+    exceeds the baselined count; an entry is *stale* when the debt it froze
+    no longer exists (prompting a baseline shrink, never a failure)."""
+    counts: Dict[Tuple[str, str, str], int] = {}
+    for f in findings:
+        counts[f.fingerprint] = counts.get(f.fingerprint, 0) + 1
+    new: List[Finding] = []
+    seen: Dict[Tuple[str, str, str], int] = {}
+    for f in findings:
+        seen[f.fingerprint] = seen.get(f.fingerprint, 0) + 1
+        budget = baseline.get(f.fingerprint, {}).get("count", 0)
+        if seen[f.fingerprint] > budget:
+            new.append(f)
+    stale = [
+        e
+        for fp, e in baseline.items()
+        if counts.get(fp, 0) < e.get("count", 0)
+    ]
+    return new, stale
+
+
+def write_baseline(
+    path: Path,
+    findings: Sequence[Finding],
+    old: Optional[Dict[Tuple[str, str, str], dict]] = None,
+) -> None:
+    """Freeze the current findings. Justifications (``why``) survive from the
+    previous baseline; new entries get an explicit review marker."""
+    old = old or {}
+    grouped: Dict[Tuple[str, str, str], int] = {}
+    for f in findings:
+        grouped[f.fingerprint] = grouped.get(f.fingerprint, 0) + 1
+    entries = []
+    for (code, fpath, snippet), count in sorted(grouped.items()):
+        prev = old.get((code, fpath, snippet), {})
+        entries.append(
+            {
+                "code": code,
+                "path": fpath,
+                "snippet": snippet,
+                "count": count,
+                "why": prev.get("why", "UNREVIEWED — justify or fix"),
+            }
+        )
+    Path(path).write_text(
+        json.dumps({"version": BASELINE_VERSION, "entries": entries}, indent=2)
+        + "\n"
+    )

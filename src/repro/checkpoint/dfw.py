@@ -62,7 +62,7 @@ def _history_arrays(history: Dict[str, list]) -> Dict[str, np.ndarray]:
     for k in HISTORY_KEYS:
         vals = history.get(k, [])
         dtype = np.int32 if k == "k" else np.float64
-        out[k] = np.asarray(vals, dtype)
+        out[k] = np.asarray(vals, dtype)  # REP002-ok: history holds host floats
     return out
 
 
@@ -128,6 +128,7 @@ class RunCheckpointer:
             "masks": (
                 np.zeros((0, 0), np.float32)
                 if masks is None
+                # REP002-ok: masks is a host-side numpy schedule, never traced
                 else np.asarray(masks, np.float32)
             ),
         }
@@ -190,7 +191,7 @@ class RunSnapshot:
 
     @property
     def done(self) -> bool:
-        return bool(self.extra.get("done", False))
+        return bool(self.extra.get("done", False))  # REP002-ok: extra is JSON
 
     def unpack_iterate(self, max_rank: int) -> low_rank.FactoredIterate:
         return low_rank.unpack_live(self.carry.iterate, max_rank)

@@ -91,7 +91,7 @@ class Reducer:
     def wire_bytes(self, dim: int, num_workers: int) -> int:
         """Analytic wire bytes of one ``reduce`` of a (dim,) f32 vector
         (ring all-reduce factor 2x, all-gather 1x of the gathered shape) —
-        the extended-Table-1 entries; ``launch/hlo_analysis`` measures the
+        the extended-Table-1 entries; ``repro.analysis.hlo`` measures the
         same convention."""
         raise NotImplementedError
 

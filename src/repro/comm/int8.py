@@ -107,12 +107,16 @@ def verify_quantize_kernels(
         x, noise, scale, budget=b, use_pallas=use_pallas, interpret=interpret
     )
     q_want = qref.quantize(x, noise, scale, b)
-    err_q = float(jnp.max(jnp.abs(q_got.astype(jnp.int32) - q_want.astype(jnp.int32))))
     d_got = qops.dequantize(
         q_got, scale, budget=b, use_pallas=use_pallas, interpret=interpret
     )
-    err_d = float(jnp.max(jnp.abs(d_got - qref.dequantize(q_want, scale, b))))
-    err = max(err_q, err_d)
+    # One explicit batched pull for both error scalars (REP002): float() on
+    # each jnp reduction would block on two implicit device->host syncs.
+    err_q, err_d = jax.device_get((
+        jnp.max(jnp.abs(q_got.astype(jnp.int32) - q_want.astype(jnp.int32))),
+        jnp.max(jnp.abs(d_got - qref.dequantize(q_want, scale, b))),
+    ))
+    err = max(float(err_q), float(err_d))
     if err > tol:
         raise AssertionError(
             f"quantize kernel diverges from jnp reference: max abs err {err:.3e} "

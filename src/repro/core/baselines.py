@@ -11,7 +11,6 @@ are apples-to-apples.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, Optional, Tuple
 
 import jax

@@ -14,7 +14,7 @@ low-rank head, storable in factored form.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -165,4 +165,4 @@ def top_k_error(
     logits = low_rank.right_multiply(it, x)
     _, idx = jax.lax.top_k(logits, k)
     hit = jnp.any(idx == y[:, None], axis=-1)
-    return float(1.0 - jnp.mean(hit.astype(jnp.float32)))
+    return float(jax.device_get(1.0 - jnp.mean(hit.astype(jnp.float32))))

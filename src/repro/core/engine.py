@@ -124,6 +124,33 @@ def resolve_max_rank(max_rank: Optional[int], num_epochs: int) -> int:
     return max_rank
 
 
+def dispatch_contract(
+    *,
+    segments: int = 1,
+    max_compilations: Optional[int] = 2,
+    name: Optional[str] = None,
+):
+    """The engine's reason to exist, declared as a checkable contract: a run
+    over ``segments`` planned segments costs at most ``segments + 1`` jitted
+    dispatches (one scan per segment + the driver's final-loss eval), at
+    most O(1) explicit host syncs, and — under ``contract.guard()`` — zero
+    implicit device->host transfers. ``max_compilations`` defaults to 2
+    (the single-segment ``const:K`` case: one scan executable + the final
+    loss eval); pass ``None`` for schedules whose distinct (K, length)
+    signature count isn't pinned. Consumed by ``tests/test_engine.py`` (the
+    serial, log-schedule, and 8-way pins) and ``tools/repro_contracts.py``
+    against ``FitResult.stats``."""
+    from ..analysis.contracts import Contract  # lazy: analysis is tooling
+
+    return Contract(
+        name=name or f"engine.dispatch[segments={segments}]",
+        max_dispatches=segments + 1,
+        max_compilations=max_compilations,
+        max_host_syncs=2,
+        no_host_transfers=True,
+    )
+
+
 @dataclasses.dataclass
 class EngineResult:
     """``history`` lists are truncated to ``epochs_run``. ``stats`` counts

@@ -34,6 +34,11 @@ from . import low_rank
 from .power_method import AxisName, power_iterations, sphere_vector
 from .trace_norm import duality_gap
 
+# Scalar psums (loss, <W,grad>, line-search terms) stay *exact* by design —
+# see comm/base.py — but still route through the comm chokepoint rather than
+# raw lax.psum (lint rule REP001), so collective call sites stay auditable.
+from ..comm.base import psum as _psum
+
 PyTree = Any
 
 
@@ -109,7 +114,7 @@ def k_schedule(name: str) -> Callable[[int], int]:
     if name == "log_half":
         return lambda t: max(1, int(1 + 0.5 * math.log(t + 1)))
     if name.startswith("linear:"):
-        c = float(name.split(":")[1])
+        c = float(name.split(":")[1])  # REP002-ok: parsing a schedule string
         if c <= 0:
             raise ValueError(
                 f"K schedule {name!r}: slope c must be > 0 so K(t) >= 1"
@@ -121,10 +126,6 @@ def k_schedule(name: str) -> Callable[[int], int]:
 # ---------------------------------------------------------------------------
 # One FW epoch
 # ---------------------------------------------------------------------------
-
-
-def _psum(x, axis_name: AxisName):
-    return x if axis_name is None else jax.lax.psum(x, axis_name)
 
 
 def make_epoch_step(

@@ -110,13 +110,17 @@ def pack_live(it: FactoredIterate) -> dict:
     to *any* capacity bit-exactly."""
     import numpy as np
 
-    k = int(np.asarray(it.count))
+    # One explicit batched device->host fetch: per-leaf np.asarray would be
+    # five implicit blocking pulls (lint rule REP002) and serving hot-swaps
+    # run pack_live under a transfer guard.
+    host = jax.device_get(it)
+    k = int(host.count)
     return {
-        "u": np.asarray(it.u)[:k],
-        "s": np.asarray(it.s)[:k],
-        "v": np.asarray(it.v)[:k],
-        "alpha": np.asarray(it.alpha),
-        "count": np.asarray(it.count),
+        "u": np.asarray(host.u)[:k],
+        "s": np.asarray(host.s)[:k],
+        "v": np.asarray(host.v)[:k],
+        "alpha": np.asarray(host.alpha),
+        "count": np.asarray(host.count),
     }
 
 
@@ -126,6 +130,9 @@ def unpack_live(packed: dict, max_rank: int) -> FactoredIterate:
     ``num_epochs``) as long as it holds the live prefix."""
     import numpy as np
 
+    # No-op for already-host numpy leaves, an explicit boundary if a caller
+    # hands us device arrays — either way the padding below is host-side.
+    packed = jax.device_get(packed)
     k = int(np.asarray(packed["count"]))
     if max_rank < k:
         raise ValueError(

@@ -16,6 +16,12 @@ from typing import Callable, NamedTuple, Optional, Sequence, Union
 import jax
 import jax.numpy as jnp
 
+# The exact-psum master aggregate goes through the comm layer's chokepoint
+# (never a raw lax.psum here — lint rule REP001): the Reducer subsystem owns
+# every vector collective so encodings and wire-byte accounting stay in one
+# place. comm never imports core, so this is cycle-free.
+from ..comm.base import psum as _psum
+
 AxisName = Optional[Union[str, Sequence[str]]]
 _EPS = 1e-30
 
@@ -28,10 +34,19 @@ class PowerResult(NamedTuple):
     sigma: jax.Array  # ()  top singular value estimate (= ||A^T u|| >= 0)
 
 
-def _psum(x: jax.Array, axis_name: AxisName) -> jax.Array:
-    if axis_name is None:
-        return x
-    return jax.lax.psum(x, axis_name)
+def collective_rounds_contract(num_iters: int):
+    """The paper's communication budget as a declared, checkable contract:
+    K two-sided power iterations execute exactly 2K aggregation rounds
+    (one all-reduce per matvec/rmatvec pair side), never 2K+1 — the
+    carried-sigma invariant. Consumed by ``tests/test_power_method.py`` and
+    ``tools/repro_contracts.py`` against the compiled HLO of a shard_map'd
+    ``power_iterations``."""
+    from ..analysis.contracts import Contract  # lazy: analysis is tooling
+
+    return Contract(
+        name=f"power_method.collective_rounds[K={num_iters}]",
+        collective_counts={"all-reduce": 2.0 * num_iters},
+    )
 
 
 def sphere_vector(key: jax.Array, m: int, dtype=jnp.float32) -> jax.Array:

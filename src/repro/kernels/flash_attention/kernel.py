@@ -42,9 +42,6 @@ def _flash_kernel(
     q_start = iq * block_q
     k_start = jk * block_k
 
-    # Causal tile skip: tile is live iff some k_pos <= some q_pos.
-    live = (not causal) or True  # static; runtime guard below
-
     def _compute():
         q = q_ref[0].astype(jnp.float32)  # (bq, dh)
         k = k_ref[0].astype(jnp.float32)  # (bk, dh)
@@ -79,8 +76,8 @@ def _flash_kernel(
 
     @pl.when(jk == num_kv_blocks - 1)
     def _finalize():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
 @functools.partial(

@@ -1,7 +1,6 @@
 """Pure-jnp oracle for the fused rank-1 update."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

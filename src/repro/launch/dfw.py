@@ -223,6 +223,9 @@ def shard_observations(
     """
     import numpy as np
 
+    # Explicit boundary (no-op on numpy inputs): a caller handing device
+    # arrays gets one batched fetch, not four implicit pulls (REP002).
+    rows, cols, vals, weight = jax.device_get((rows, cols, vals, weight))
     rows_np = np.asarray(rows, np.int64)
     cols_np = np.asarray(cols, np.int64)
     vals_np = np.asarray(vals, np.float32)

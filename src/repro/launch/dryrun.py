@@ -19,7 +19,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import ARCH_IDS, get_config  # noqa: E402
-from repro.launch import hlo_analysis  # noqa: E402
+from repro.analysis import hlo as hlo_analysis  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.params import param_pspecs  # noqa: E402
 from repro.launch.sharding import pspec, rules_for, use_mesh  # noqa: E402
@@ -211,7 +211,6 @@ def main() -> None:
                 if shape_name not in shapes:
                     print(f"SKIP {arch} {shape_name} (inapplicable)")
                     continue
-                t0 = time.time()
                 try:
                     res = run_cell(
                         arch, shape_name, multi_pod=multi_pod, out_dir=out_dir,

@@ -1,264 +1,15 @@
-"""Post-SPMD HLO text analysis: FLOPs, dot memory traffic, collective bytes.
+"""Compat re-export: the HLO walker moved to ``repro.analysis.hlo``.
 
-Why not just ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits each
-while-loop (lax.scan) body ONCE, so a 48-layer scanned model reports ~1/48 of
-its real FLOPs. This walker parses ``compiled.as_text()`` (the partitioned,
-per-device module), builds the computation call graph, extracts loop trip
-counts from the loop-condition compare constants, and multiplies.
-
-Per-device quantities returned:
-  flops            — 2*M*N*K summed over dot ops (+ trivial conv terms)
-  dot_bytes        — operand+output bytes of every dot (each matmul streams
-                     its tiles through VMEM once; upper bound that ignores
-                     fusion, lower bound that ignores spills)
-  collective_bytes — wire bytes per device by collective type, with ring
-                     factors: all-reduce 2x, all-gather/reduce-scatter 1x
-                     (of the large shape), all-to-all & permute 1x
-  collective_count — op counts by type (executed, i.e. trip-multiplied)
+The walker started life here as a launch-layer tool (dry-run rooflines),
+but it is really the *measurement* half of the repo's correctness tooling —
+``repro.analysis.contracts`` builds the declarative HLO/dispatch contract
+checker on top of it. Import from ``repro.analysis.hlo`` going forward.
 """
-from __future__ import annotations
+from ..analysis.hlo import (  # noqa: F401  (re-export shim)
+    COLLECTIVES,
+    Costs,
+    HloModule,
+    analyze,
+)
 
-import dataclasses
-import re
-from typing import Dict, List, Optional, Tuple
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
-    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
-    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
-}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
-_CALLED_RE = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
-_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
-_OPERANDS_RE = re.compile(r"\(\s*(%[\w.\-]+(?:\s*,\s*%[\w.\-]+)*)?\s*\)")
-_CONST_RE = re.compile(r"%?([\w.\-]+)\s*=\s*s32\[\]\s+constant\((\d+)\)")
-_COMPARE_RE = re.compile(r"compare\(([^)]*)\),?.*direction=(LT|LE|GT|GE)")
-
-COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-               "collective-permute")
-
-
-def _shape_bytes(shape_str: str) -> int:
-    """Bytes of 'f32[1,2,3]' or a tuple '(f32[..], bf16[..])'."""
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(shape_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def _shape_dims(shape_str: str) -> List[int]:
-    m = _SHAPE_RE.search(shape_str)
-    if not m:
-        return []
-    return [int(d) for d in m.group(2).split(",") if d]
-
-
-@dataclasses.dataclass
-class Costs:
-    flops: float = 0.0
-    dot_bytes: float = 0.0
-    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
-    coll_count: Dict[str, float] = dataclasses.field(default_factory=dict)
-    # (op_type, shape_str) -> [executed_count, wire_bytes_total]
-    coll_detail: Dict[Tuple[str, str], List[float]] = dataclasses.field(
-        default_factory=dict
-    )
-
-    def add(self, other: "Costs", mult: float = 1.0) -> None:
-        self.flops += other.flops * mult
-        self.dot_bytes += other.dot_bytes * mult
-        for k, v in other.coll_bytes.items():
-            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
-        for k, v in other.coll_count.items():
-            self.coll_count[k] = self.coll_count.get(k, 0.0) + v * mult
-        for k, (c, b) in other.coll_detail.items():
-            cur = self.coll_detail.setdefault(k, [0.0, 0.0])
-            cur[0] += c * mult
-            cur[1] += b * mult
-
-
-class HloModule:
-    def __init__(self, text: str):
-        self.computations: Dict[str, List[str]] = {}
-        self.entry: Optional[str] = None
-        self._parse(text)
-
-    def _parse(self, text: str) -> None:
-        cur = None
-        for line in text.splitlines():
-            stripped = line.strip()
-            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(\([^)]*\))?\s*->.*\{", stripped)
-            if m and not stripped.startswith("%"):
-                pass
-            header = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->\s+.*\{\s*$", stripped)
-            if header:
-                cur = header.group(2)
-                self.computations[cur] = []
-                if header.group(1):
-                    self.entry = cur
-                continue
-            if stripped == "}":
-                cur = None
-                continue
-            if cur is not None and stripped:
-                self.computations[cur].append(stripped)
-
-    # -- trip counts ------------------------------------------------------
-    def trip_count(self, cond_comp: str) -> float:
-        """Loop bound from the condition computation. XLA often hides the
-        compare inside a wrapped fusion, so the robust extraction is: the
-        largest scalar s32 constant in the condition body (loop bounds dwarf
-        the 0/1 step constants). Falls back to 1."""
-        lines = self.computations.get(cond_comp, [])
-        best = 0
-        for ln in lines:
-            m = _CONST_RE.search(ln)
-            if m:
-                best = max(best, int(m.group(2)))
-        return float(best) if best > 0 else 1.0
-
-    # -- cost walk ---------------------------------------------------------
-    def _own_and_children(self, comp: str) -> Tuple[Costs, List[Tuple[str, float]]]:
-        costs = Costs()
-        children: List[Tuple[str, float]] = []
-        shapes: Dict[str, str] = {}
-        lines = self.computations.get(comp, [])
-        # first pass: op -> shape
-        for ln in lines:
-            m = _OP_RE.match(ln)
-            if m:
-                shapes[m.group(1)] = m.group(2)
-        for ln in lines:
-            m = _OP_RE.match(ln)
-            if not m:
-                continue
-            name, shape_str, op = m.groups()
-            if op == "dot":
-                out_dims = _shape_dims(shape_str)
-                out_elems = 1
-                for d in out_dims:
-                    out_elems *= d
-                # contracted size: lhs elements / (out elems sans rhs free)…
-                # robust route: lhs shape * rhs shape / out shape gives
-                # (contract^2 * batch) — instead read contracting dims:
-                k = self._dot_contract_size(ln, shapes)
-                costs.flops += 2.0 * out_elems * k
-                costs.dot_bytes += _shape_bytes(shape_str) + sum(
-                    _shape_bytes(shapes.get(o, "")) for o in self._operands(ln)
-                )
-            elif op == "convolution":
-                # depthwise/small convs in this codebase: bound by output*kernel
-                out_elems = 1
-                for d in _shape_dims(shape_str):
-                    out_elems *= d
-                costs.flops += 2.0 * out_elems * 8  # kernel<=4, 2 ops
-            elif op in COLLECTIVES:
-                nbytes = _shape_bytes(shape_str)
-                if op == "all-reduce":
-                    wire = 2.0 * nbytes
-                elif op == "reduce-scatter":
-                    ops_ = self._operands(ln)
-                    wire = float(sum(_shape_bytes(shapes.get(o, "")) for o in ops_) or nbytes)
-                else:  # all-gather / all-to-all / collective-permute
-                    wire = float(nbytes)
-                costs.coll_bytes[op] = costs.coll_bytes.get(op, 0.0) + wire
-                costs.coll_count[op] = costs.coll_count.get(op, 0.0) + 1.0
-                det = costs.coll_detail.setdefault((op, shape_str), [0.0, 0.0])
-                det[0] += 1.0
-                det[1] += wire
-            if op == "while":
-                called = _CALLED_RE.findall(ln)
-                cond = body = None
-                for c in called:
-                    if "cond" in c or c.endswith("condition"):
-                        cond = cond or c
-                for mm in re.finditer(r"(condition|body)=%?([\w.\-]+)", ln):
-                    if mm.group(1) == "condition":
-                        cond = mm.group(2)
-                    else:
-                        body = mm.group(2)
-                trips = self.trip_count(cond) if cond else 1.0
-                if body:
-                    children.append((body, trips))
-            elif op in ("fusion", "call", "conditional", "reduce", "map",
-                        "reduce-window", "scatter", "select-and-scatter", "sort",
-                        "custom-call"):
-                for c in _CALLED_RE.findall(ln):
-                    children.append((c, 1.0))
-                mb = _BRANCHES_RE.search(ln)
-                if mb:
-                    for c in mb.group(1).split(","):
-                        children.append((c.strip().lstrip("%"), 1.0))
-        return costs, children
-
-    def _operands(self, line: str) -> List[str]:
-        """Operand names of an op line: the %refs inside 'op(...)' only
-        (never the metadata)."""
-        m = _OP_RE.match(line)
-        if not m:
-            return []
-        op = m.group(3)
-        idx = line.find(op + "(", m.end(3) - len(op) - 1)
-        if idx < 0:
-            idx = line.find(op + "(")
-        start = idx + len(op) + 1
-        end = line.find(")", start)
-        if end < 0:
-            end = len(line)
-        return re.findall(r"%([\w.\-]+)", line[start:end])
-
-    def _dot_contract_size(self, line: str, shapes: Dict[str, str]) -> float:
-        mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
-        ops = self._operands(line)
-        if not mc or not ops:
-            return 1.0
-        lhs_dims = _shape_dims(shapes.get(ops[0], ""))
-        k = 1.0
-        for d in mc.group(1).split(","):
-            if d and int(d) < len(lhs_dims):
-                k *= lhs_dims[int(d)]
-        return k
-
-    def total_costs(self) -> Costs:
-        memo: Dict[str, Costs] = {}
-
-        def walk(comp: str) -> Costs:
-            if comp in memo:
-                return memo[comp]
-            memo[comp] = Costs()  # cycle guard
-            own, children = self._own_and_children(comp)
-            total = Costs()
-            total.add(own)
-            for child, mult in children:
-                if child in self.computations:
-                    total.add(walk(child), mult)
-            memo[comp] = total
-            return total
-
-        entry = self.entry or max(self.computations, key=lambda c: len(self.computations[c]))
-        return walk(entry)
-
-
-def analyze(hlo_text: str, top_k: int = 12) -> Dict:
-    mod = HloModule(hlo_text)
-    c = mod.total_costs()
-    top = sorted(c.coll_detail.items(), key=lambda kv: -kv[1][1])[:top_k]
-    return {
-        "flops": c.flops,
-        "dot_bytes": c.dot_bytes,
-        "collective_bytes": c.coll_bytes,
-        "collective_bytes_total": float(sum(c.coll_bytes.values())),
-        "collective_count": c.coll_count,
-        "top_collectives": [
-            {"op": op, "shape": shape, "count": cnt, "wire_bytes": b}
-            for (op, shape), (cnt, b) in top
-        ],
-    }
+__all__ = ["COLLECTIVES", "Costs", "HloModule", "analyze"]

@@ -8,7 +8,7 @@ Functions (not module constants) so importing never touches device state.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np

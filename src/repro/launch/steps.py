@@ -5,12 +5,10 @@ cell and the drivers (train.py / serve.py) execute for real.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.models import lm
 from repro.models.config import ModelConfig, ShapeSpec, input_specs

@@ -15,11 +15,9 @@ from __future__ import annotations
 
 import argparse
 import time
-from pathlib import Path
 from typing import Optional, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointStore
@@ -31,7 +29,7 @@ from repro.optim import adamw
 
 from .mesh import make_mesh
 from .params import param_pspecs
-from .sharding import pspec, use_mesh
+from .sharding import use_mesh
 from .steps import batch_pspecs, make_train_step
 
 

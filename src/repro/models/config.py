@@ -7,7 +7,7 @@ default to inert values. Exact per-arch instantiations live in
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

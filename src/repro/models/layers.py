@@ -6,7 +6,6 @@ no-op outside a mesh context so smoke tests and dry-runs share one code path.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -15,7 +14,7 @@ import jax.numpy as jnp
 from repro.compat import shard_map_compat
 from repro.kernels.flash_attention import ops as attn_ops
 from repro.kernels.flash_attention import ref as attn_ref
-from repro.launch.sharding import axes_size, data_axes, seq_axes, shard
+from repro.launch.sharding import axes_size, seq_axes, shard
 
 Params = Dict[str, jax.Array]
 
@@ -188,12 +187,12 @@ def decode_attention_seq_sharded(
         sres = jnp.where(mask, sres, -1e30)
         m = jnp.max(sres, axis=-1, keepdims=True)
         p = jnp.exp(sres - m)
-        l = jnp.sum(p, axis=-1, keepdims=True)
+        lsum = jnp.sum(p, axis=-1, keepdims=True)
         acc = jnp.einsum("bhqk,bhkd->bhqd", p, _expand_kv(v_, q_.shape[1]).astype(jnp.float32))
         # global online-softmax combine
         m_g = jax.lax.pmax(m, axes)
         corr = jnp.exp(m - m_g)
-        l_g = jax.lax.psum(l * corr, axes)
+        l_g = jax.lax.psum(lsum * corr, axes)
         acc_g = jax.lax.psum(acc * corr, axes)
         return (acc_g / jnp.maximum(l_g, 1e-30)).astype(q_.dtype)
 

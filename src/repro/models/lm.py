@@ -13,8 +13,7 @@ compiles); remat policy per config. Everything is parameter-dict based.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -347,10 +346,10 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
     hkv, dh = cfg.num_kv_heads, cfg.head_dim_
     sds = jax.ShapeDtypeStruct
     if cfg.family in ("dense", "moe", "vlm"):
-        l = cfg.num_layers
+        nl = cfg.num_layers
         return {
-            "k": sds((l, batch, hkv, max_len, dh), dt),
-            "v": sds((l, batch, hkv, max_len, dh), dt),
+            "k": sds((nl, batch, hkv, max_len, dh), dt),
+            "v": sds((nl, batch, hkv, max_len, dh), dt),
         }
     if cfg.family == "hybrid":
         nb = cfg.num_layers // cfg.hybrid_block
@@ -363,11 +362,11 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
             "mamba_conv": sds((cfg.num_layers, batch, cfg.d_conv - 1, conv_dim), dt),
         }
     if cfg.family == "ssm":
-        l, d = cfg.num_layers, cfg.d_model
+        nl, d = cfg.num_layers, cfg.d_model
         return {
-            "s": sds((l, batch, d // rwkv6.HEAD, rwkv6.HEAD, rwkv6.HEAD), jnp.float32),
-            "x_tm": sds((l, batch, d), jnp.float32),
-            "x_cm": sds((l, batch, d), jnp.float32),
+            "s": sds((nl, batch, d // rwkv6.HEAD, rwkv6.HEAD, rwkv6.HEAD), jnp.float32),
+            "x_tm": sds((nl, batch, d), jnp.float32),
+            "x_cm": sds((nl, batch, d), jnp.float32),
         }
     raise ValueError(cfg.family)
 

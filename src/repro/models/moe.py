@@ -21,14 +21,14 @@ Without a mesh the same math runs locally (E_loc = E) — used by smoke tests.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map_compat
-from repro.launch.sharding import active_mesh, data_axes, model_axes, pspec
+from repro.launch.sharding import active_mesh, data_axes, model_axes
 
 Params = Dict[str, jax.Array]
 

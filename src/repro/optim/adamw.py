@@ -5,7 +5,7 @@ verbatim to the optimizer state — ZeRO-style when params are FSDP-sharded.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

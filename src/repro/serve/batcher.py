@@ -93,7 +93,7 @@ class MicroBatcher:
 
     def submit(self, x) -> Ticket:
         """Queue one (n_in,) request; auto-flushes at ``flush_at`` rows."""
-        row = np.asarray(x, np.float32)
+        row = np.asarray(x, np.float32)  # REP002-ok: host request ingress
         if row.ndim != 1 or row.shape[0] != self.engine.n_in:
             raise ValueError(
                 f"submit takes one ({self.engine.n_in},) request; got shape "

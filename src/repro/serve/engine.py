@@ -241,20 +241,24 @@ class ServingEngine:
                     f"checkpoint model is {got[0]}x{got[1]} but this engine "
                     f"serves {self.d}x{self.m}"
                 )
-        live = int(np.asarray(packed["count"]))
+        # `packed` leaves may still live on device (a dict handed over from
+        # a training process): one explicit batched device_get is the load
+        # path's only transfer — int()/np.asarray on the leaves would each
+        # block on an implicit pull (lint rule REP002).
+        packed = jax.device_get(packed)
+        live = int(packed["count"])
         capacity = rank_bucket(live, self.cfg.rank_block)
         padded = low_rank.unpack_live(packed, capacity)
-        u_np, s_np, v_np = np.asarray(padded.u), np.asarray(padded.s), np.asarray(padded.v)
-        if u_np.shape[1] != self.d or v_np.shape[1] != self.m:
+        if padded.u.shape[1] != self.d or padded.v.shape[1] != self.m:
             raise ValueError(
-                f"model factors are {u_np.shape[1]}x{v_np.shape[1]} but this "
-                f"engine serves {self.d}x{self.m}"
+                f"model factors are {padded.u.shape[1]}x{padded.v.shape[1]} "
+                f"but this engine serves {self.d}x{self.m}"
             )
         model = Model(
-            u=jnp.asarray(u_np, jnp.float32),
-            s=jnp.asarray(s_np, jnp.float32),
-            v=jnp.asarray(v_np, jnp.float32),
-            alpha=jnp.asarray(np.asarray(packed["alpha"]), jnp.float32),
+            u=jnp.asarray(padded.u, jnp.float32),
+            s=jnp.asarray(padded.s, jnp.float32),
+            v=jnp.asarray(padded.v, jnp.float32),
+            alpha=jnp.asarray(packed["alpha"], jnp.float32),
             live_rank=live,
             capacity=capacity,
             version=(self._model.version + 1) if self._model else 0,
@@ -296,7 +300,7 @@ class ServingEngine:
         dispatch time — a concurrent ``load`` cannot retarget it.
         """
         model = self.model
-        xh = np.asarray(x, np.float32)
+        xh = np.asarray(x, np.float32)  # REP002-ok: host request ingress
         if xh.ndim == 1:
             xh = xh[None, :]
         b, n_in = xh.shape
@@ -322,6 +326,33 @@ class ServingEngine:
     def score(self, x) -> np.ndarray:
         """Blocking convenience: ``score_async(x).block()``."""
         return self.score_async(x).block()
+
+    # ----------------------------------------------------------- contract
+    def contract(self, *, max_compilations: Optional[int] = None):
+        """The serving layer's declarative invariant (see
+        ``repro.analysis.contracts``): no compiled scorer may materialize a
+        d x m (or m x d) intermediate — scoring is strictly factored,
+        O(t(d+m)) per request — and the request path performs no implicit
+        device->host transfer. ``max_compilations`` optionally pins the AOT
+        no-recompile guarantee on top."""
+        from ..analysis.contracts import Contract
+
+        return Contract(
+            name=f"serve.never_materialize[{self.d}x{self.m}]",
+            forbid_shapes=((self.d, self.m), (self.m, self.d)),
+            max_compilations=max_compilations,
+            no_host_transfers=True,
+        )
+
+    def check_contract(self, contract=None) -> "Contract":
+        """Assert ``contract`` (default: ``self.contract()``) against every
+        compiled executable's HLO and the engine's runtime counters. Raises
+        ``ContractViolation`` with the offending HLO line on failure."""
+        c = contract if contract is not None else self.contract()
+        for exe in self._compiled.values():
+            c.check_hlo(exe)
+        c.check_stats(self.stats)
+        return c
 
     # ------------------------------------------------------------- verify
     def _verify_once(self, model: Model) -> None:

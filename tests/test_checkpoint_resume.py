@@ -27,7 +27,7 @@ import pytest
 
 from repro import checkpoint
 from repro.checkpoint.store import CheckpointStore
-from repro.core import engine, frank_wolfe, low_rank, tasks
+from repro.core import frank_wolfe, low_rank, tasks
 from repro.launch import dfw
 
 SRC = str(Path(__file__).resolve().parent.parent / "src")

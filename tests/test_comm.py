@@ -344,8 +344,9 @@ def test_int8_within_2pct_and_3x_fewer_bytes():
     out = _run("""
         import dataclasses
         import jax, jax.numpy as jnp, numpy as np
+        from repro.analysis import contracts
         from repro.core import tasks, low_rank, frank_wolfe
-        from repro.launch import dfw, hlo_analysis
+        from repro.launch import dfw
         from repro import comm as comm_lib
 
         # --- convergence: MTLS ---
@@ -411,9 +412,8 @@ def test_int8_within_2pct_and_3x_fewer_bytes():
                     red.init_state(d, m)),
                 t=jax.ShapeDtypeStruct((), jnp.int32),
                 key=jax.ShapeDtypeStruct((2,), jnp.uint32))
-            comp = jax.jit(ep).lower(carry, msk).compile()
-            bytes_by[cm] = hlo_analysis.analyze(
-                comp.as_text())["collective_bytes_total"]
+            bytes_by[cm] = contracts.measure(
+                ep, carry, msk)["collective_bytes_total"]
         ratio = bytes_by["dense"] / bytes_by["int8"]
         assert ratio >= 3.0, bytes_by
         print("bytes ratio", ratio)

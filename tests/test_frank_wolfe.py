@@ -34,7 +34,7 @@ def test_k_schedule_log_variants():
     # nondecreasing, integer, and the half schedule never exceeds the full one
     assert all(b >= a for a, b in zip(vals_log, vals_log[1:]))
     assert all(b >= a for a, b in zip(vals_half, vals_half[1:]))
-    assert all(h <= l for h, l in zip(vals_half, vals_log))
+    assert all(h <= g for h, g in zip(vals_half, vals_log))
     assert all(isinstance(v, int) and v >= 1 for v in vals_log + vals_half)
     assert vals_log[-1] > vals_log[0]  # actually grows
 
@@ -232,9 +232,7 @@ def test_sva_converges_worse_than_dfw_trace():
               key=jax.random.PRNGKey(9), schedule="const:2", step_size="linesearch")
 
     # SVA with a single worker == exact LMO; to expose the bias we give SVA
-    # only 1/8 of the data for its direction (a worker's-eye view) while the
-    # update/linesearch still uses the full data via a second state.
-    st_full = task.init_state(x, y)
+    # only 1/8 of the data (a worker's-eye view of the direction).
     st_local = task.init_state(x[:200], y[:200])
     it = low_rank.init(40, 60, 50)
     sva_local = baselines.make_sva_epoch_step(task, 1.0, step_size="linesearch")

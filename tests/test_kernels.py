@@ -132,7 +132,8 @@ def test_factor_matvec_zero_tail_rows_are_exact_noops():
     a = jax.random.normal(jax.random.fold_in(KEY, 46), (3, 40))
     s = jax.random.normal(jax.random.fold_in(KEY, 47), (3,))
     b = jax.random.normal(jax.random.fold_in(KEY, 48), (3, 20))
-    pad = lambda t, rows: jnp.concatenate([t, jnp.zeros((rows,) + t.shape[1:])])
+    def pad(t, rows):
+        return jnp.concatenate([t, jnp.zeros((rows,) + t.shape[1:])])
     live = factor_matvec.factor_matvec(x, a, s, b, interpret=True,
                                        block_b=32, block_o=32)
     padded = factor_matvec.factor_matvec(

@@ -120,8 +120,10 @@ def test_carried_sigma_trajectory_unchanged(k):
 
 def test_collective_rounds_per_epoch_is_2k():
     """An epoch's power method costs exactly 2K collective rounds (was 2K+1
-    before the sigma carry): counted from the compiled HLO of a shard_map'd
-    power_iterations on 8 fake devices via launch/hlo_analysis."""
+    before the sigma carry). The bound itself lives with the code that owns
+    it — ``power_method.collective_rounds_contract(K)`` — and this test (like
+    ``tools/repro_contracts.py``) just checks that declaration against the
+    compiled HLO of a shard_map'd power_iterations on 8 fake devices."""
     src = str(Path(__file__).resolve().parent.parent / "src")
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -131,7 +133,6 @@ def test_collective_rounds_per_epoch_is_2k():
         from jax.sharding import PartitionSpec as P
         from repro.compat import shard_map_compat
         from repro.core import power_method
-        from repro.launch import hlo_analysis
 
         # Row-shard an explicit (n, m) matrix: each worker holds a (n/8, m)
         # summand A_j, so the implicit operator A = sum_j A_j is (n/8, m).
@@ -147,11 +148,9 @@ def test_collective_rounds_per_epoch_is_2k():
             out_specs=power_method.PowerResult(u=P(), v=P(), sigma=P()))
         a = jax.ShapeDtypeStruct((n, m), jnp.float32)
         v0 = jax.ShapeDtypeStruct((m,), jnp.float32)
-        comp = jax.jit(wrapped).lower(a, v0).compile()
-        res = hlo_analysis.analyze(comp.as_text())
-        counts = res["collective_count"]
-        assert counts == {"all-reduce": 2.0 * K}, counts
-        print("collective rounds:", counts)
+        contract = power_method.collective_rounds_contract(K)
+        analysis = contract.check_hlo(wrapped, a, v0)
+        print("collective rounds:", analysis["collective_count"])
     """)
     out = subprocess.run([sys.executable, "-c", script], capture_output=True,
                          text=True, timeout=600, env=env)

@@ -6,7 +6,7 @@ import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from hypothesis import given
 
 from repro.core import low_rank, tasks
 from repro.core.trace_norm import trace_norm as exact_trace_norm

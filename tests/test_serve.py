@@ -100,15 +100,19 @@ def test_hot_swap_zero_recompiles_no_drops_no_stale_scores():
     against the OLD model, post-swap traffic scores the NEW one, and the
     engine compiles exactly once — all without a single implicit
     device->host transfer (scores leave the device only via the handle's
-    explicit ``block``)."""
+    explicit ``block``). The compile/transfer bounds are the serving layer's
+    own declaration (``ServingEngine.contract``), shared with
+    ``tools/repro_contracts.py``; ``check_contract`` additionally walks every
+    compiled executable's HLO for forbidden d x m materializations."""
     eng = _engine(rank_block=8, verify_kernels=False)
+    contract = eng.contract(max_compilations=1)
     it_old, it_new = _iterate(3, seed=1), _iterate(7, seed=2)
     # Host-side packed models: the checkpoint-restore shape of a swap.
     packed_old = low_rank.pack_live(it_old)
     packed_new = low_rank.pack_live(it_new)
     x = np.asarray(jax.random.normal(jax.random.PRNGKey(9), (5, D)))
 
-    with jax.transfer_guard_device_to_host("disallow"):
+    with contract.guard():
         eng.load(packed_old)
         in_flight = eng.score_async(x)
         model = eng.load(packed_new)  # swap while the batch is in flight
@@ -116,7 +120,8 @@ def test_hot_swap_zero_recompiles_no_drops_no_stale_scores():
         old_scores = in_flight.block()  # explicit transfer — allowed
         new_scores = after.block()
 
-    assert eng.stats["compilations"] == 1, eng.stats  # same bucket: one AOT build
+    eng.check_contract(contract)  # == 1 AOT build; no d x m in any executable
+    assert eng.stats["compilations"] == 1, eng.stats  # same bucket, tight
     assert eng.stats["loads"] == 2 and eng.stats["dispatches"] == 2
     np.testing.assert_allclose(old_scores, x @ _dense(it_old), rtol=1e-4, atol=1e-5)
     np.testing.assert_allclose(new_scores, x @ _dense(it_new), rtol=1e-4, atol=1e-5)
@@ -139,6 +144,18 @@ def test_rank_bucket_contract():
     assert serve.rank_bucket(8, 8) == 8
     assert serve.rank_bucket(9, 8) == 16
     assert serve.rank_bucket(5, 1) == 5
+
+
+def test_scorer_never_materializes_dxm():
+    """Factor-form serving's core claim, checked on the compiled artifact:
+    no executable — across rank buckets, plain and transposed — emits a
+    (D, M) or (M, D) tensor. O(t(d+m)) per request, never O(dm)."""
+    for transpose in (False, True):
+        eng = _engine(rank_block=4, verify_kernels=False, transpose=transpose)
+        eng.load(_iterate(3, seed=1))
+        eng.load(_iterate(7, seed=2))  # second bucket -> second executable
+        eng.check_contract()
+        assert len(eng._compiled) == 2  # the walk covered both buckets
 
 
 # ---------------------------------------------------------------------------

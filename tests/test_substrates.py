@@ -9,7 +9,7 @@ import pytest
 
 from repro.checkpoint import CheckpointStore
 from repro.configs import ARCH_IDS, get_config
-from repro.launch import hlo_analysis
+from repro.analysis import hlo as hlo_analysis
 from repro.launch.params import param_pspecs
 from repro.launch.sharding import pspec, use_mesh
 from repro.models import lm

@@ -8,7 +8,6 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config
@@ -24,7 +23,7 @@ def test_train_loop_reduces_loss_and_resumes():
             arch="qwen2_1_5b", steps=40, seq_len=64, global_batch=8,
             ckpt_dir=d, ckpt_every=20, log_every=5, peak_lr=1e-3,
         )
-        losses = [l for _, l in hist1]
+        losses = [v for _, v in hist1]
         assert losses[-1] < losses[0], losses
         # resume from the checkpoint and keep going
         _, _, hist2 = train.train(

@@ -1,0 +1,33 @@
+#!/usr/bin/env python
+"""Run every declared HLO/dispatch contract (``repro.analysis.contracts``).
+
+Compiles the engine, power-method, and serving layers' contract probes on
+8 fake CPU devices and asserts their declared invariants against the walked
+HLO and runtime counters: 2K collective rounds per epoch, one scan dispatch
+per K(t) segment, and never materializing a d x m intermediate while serving.
+
+Exit 0 when every contract holds; 1 with the offending HLO line / counter on
+the first violation. Pairs with tools/repro_lint.py under ``make analyze``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from pathlib import Path
+
+_REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_REPO / "src"))
+
+# Must be set before jax import: the contract probes shard over 8 devices.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def main() -> int:
+    from repro.analysis import contracts
+
+    return contracts.verify_declared(verbose=True)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

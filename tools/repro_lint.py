@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""Repo-specific static lint CLI (the REPxxx rules in ``repro.analysis.lint``).
+
+Checks the DFW-Trace invariants that generic linters cannot see: collectives
+outside the ``repro.comm`` chokepoint, implicit device->host syncs in hot
+paths, kernel-package trio completeness, recompilation hazards, and
+print-on-tracer debugging leftovers. See docs/ANALYSIS.md for the catalog.
+
+Exit status is 0 when every finding is either fixed, inline-allowed
+(``# REPxxx-ok: reason``), or frozen in the checked-in baseline
+(``tools/repro_lint_baseline.json``); 1 when *new* findings appear. Stale
+baseline entries (debt that has since been fixed) are reported and also fail
+the run so the baseline never rots — regenerate it with ``--update-baseline``.
+
+Pure-Python AST analysis: does not import jax or run any repo code, so it is
+safe (and fast) on any machine.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+_REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_REPO / "src"))
+
+from repro.analysis import lint  # noqa: E402
+
+DEFAULT_BASELINE = _REPO / "tools" / "repro_lint_baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        default=[str(_REPO / "src" / "repro")],
+        help="files or directories to lint (default: src/repro)",
+    )
+    ap.add_argument(
+        "--baseline",
+        default=str(DEFAULT_BASELINE),
+        help="baseline JSON freezing known debt (default: %(default)s)",
+    )
+    ap.add_argument(
+        "--no-baseline",
+        action="store_true",
+        help="report every finding, ignoring the baseline",
+    )
+    ap.add_argument(
+        "--update-baseline",
+        action="store_true",
+        help="rewrite the baseline to the current finding set and exit 0",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog"
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for code in sorted(lint.RULES):
+            print(f"{code}  {lint.RULES[code].summary}")
+        return 0
+
+    findings = lint.lint_paths([Path(p) for p in args.paths], root=_REPO)
+
+    if args.update_baseline:
+        baseline_path = Path(args.baseline)
+        old = lint.load_baseline(baseline_path)
+        lint.write_baseline(baseline_path, findings, old)
+        print(
+            f"baseline: wrote {len(findings)} finding(s) to "
+            f"{baseline_path.relative_to(_REPO)} — fill in every "
+            '"why" before committing'
+        )
+        return 0
+
+    if args.no_baseline:
+        for f in findings:
+            print(f.format())
+        print(f"{len(findings)} finding(s)")
+        return 1 if findings else 0
+
+    baseline = lint.load_baseline(Path(args.baseline))
+    new, stale = lint.diff_baseline(findings, baseline)
+    for f in new:
+        print(f.format())
+    for e in stale:
+        print(
+            "stale baseline entry (debt fixed — shrink with "
+            f"--update-baseline): {e['code']} {e['path']}: {e['snippet']}"
+        )
+    if new:
+        print(
+            f"repro_lint: {len(new)} new finding(s). Fix the code, add an "
+            "inline '# REPxxx-ok: reason', or run tools/repro_lint.py "
+            "--update-baseline and justify the new entries."
+        )
+        return 1
+    print(
+        f"repro_lint: clean — {len(findings)} finding(s), all baselined"
+        f"{f', {len(stale)} stale entr(ies) to shrink' if stale else ''}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
