@@ -2,7 +2,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-smoke bench-check lint analyze
+.PHONY: test test-fast bench-smoke bench-check trace-smoke lint analyze
 
 # Tier-1 verify (see ROADMAP.md): full pytest suite, stop at first failure.
 test:
@@ -22,6 +22,13 @@ bench-smoke:
 # Compare the smoke record against the checked-in baselines (the CI gate).
 bench-check:
 	$(PYTHON) -m benchmarks.check_regression BENCH_smoke.json
+
+# Short instrumented train->serve run; writes TRACE_smoke.jsonl plus the
+# Perfetto-loadable TRACE_smoke.trace.json and validates both parse and
+# cover all four instrumented layers (docs/OBSERVABILITY.md). CI uploads
+# the trace files as artifacts from the bench-smoke job.
+trace-smoke:
+	$(PYTHON) tools/trace_smoke.py
 
 # Repo-specific correctness gate (docs/ANALYSIS.md): tier 1 is the REPxxx
 # AST lint (fails on findings not frozen in tools/repro_lint_baseline.json),

@@ -9,7 +9,9 @@ environment metadata so the perf trajectory is machine-readable —
 from __future__ import annotations
 
 import json
+import subprocess
 import time
+from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -64,6 +66,21 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(row, flush=True)
 
 
+def git_commit() -> Optional[str]:
+    """HEAD SHA of the repo this file lives in, or None outside a checkout
+    (e.g. an installed wheel or a stripped CI artifact dir)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=Path(__file__).resolve().parent,
+            capture_output=True, text=True, timeout=10,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
 def environment() -> Dict[str, Any]:
     """The reproducibility stamp written into every JSON dump: enough to
     tell two BENCH files apart before comparing their numbers."""
@@ -71,8 +88,10 @@ def environment() -> Dict[str, Any]:
     return {
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
+        "platform": dev.platform,
         "device_kind": dev.device_kind,
         "device_count": jax.device_count(),
+        "git_commit": git_commit(),
         "timestamp_unix": time.time(),
     }
 

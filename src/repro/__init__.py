@@ -10,5 +10,6 @@ Subpackages:
     data      — deterministic sharded data pipeline
     optim     — AdamW, schedules, PowerSGD-style gradient compression
     checkpoint— sharded save/restore with elastic re-mesh
+    obs       — zero-sync telemetry: metrics registry, span tracing, sinks
 """
 __version__ = "1.0.0"

@@ -97,6 +97,12 @@ class Contract:
     ``no_host_transfers`` is the transfer-guard discipline: run the
     workload under ``with contract.guard():`` and any implicit
     device->host pull raises at the offending line.
+
+    Telemetry clauses (checked by ``check_telemetry`` against a
+    ``repro.obs.Telemetry`` handle): ``max_noop_span_us`` caps the
+    amortized cost of entering+exiting one ``span()`` on the handle, and
+    ``max_events`` caps its recorded event count — together they pin the
+    disabled default to "free and silent" (``repro.obs.noop_contract``).
     """
 
     name: str
@@ -107,6 +113,8 @@ class Contract:
     max_compilations: Optional[int] = None
     max_host_syncs: Optional[int] = None
     no_host_transfers: bool = False
+    max_noop_span_us: Optional[float] = None
+    max_events: Optional[int] = None
 
     # ------------------------------------------------------------- helpers
     def _fail(self, clause: str, detail: str):
@@ -164,6 +172,37 @@ class Contract:
                 self._fail(key, f"stats dict has no {key!r} counter: {dict(stats)}")
             if stats[key] > cap:
                 self._fail(key, f"{stats[key]} > declared max {cap} ({dict(stats)})")
+
+    # ----------------------------------------------------------- telemetry
+    def check_telemetry(self, telemetry, iters: int = 2000) -> None:
+        """Assert the telemetry clauses against a ``repro.obs.Telemetry``
+        handle: time ``iters`` empty ``span()`` entries/exits (amortized
+        per-span cost vs ``max_noop_span_us``), then cap the handle's
+        recorded event count at ``max_events``. An *enabled* handle run
+        against the no-op contract fails the event clause — that is the
+        point: the inert default must record nothing."""
+        import time
+
+        if self.max_noop_span_us is not None:
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                with telemetry.span("contract.noop_probe"):
+                    pass
+            per_span_us = (time.perf_counter() - t0) * 1e6 / iters
+            if per_span_us > self.max_noop_span_us:
+                self._fail(
+                    "max_noop_span_us",
+                    f"{per_span_us:.2f}us per span() > declared "
+                    f"{self.max_noop_span_us}us",
+                )
+        if self.max_events is not None:
+            n = telemetry.event_count()
+            if n > self.max_events:
+                self._fail(
+                    "max_events",
+                    f"handle recorded {n} events > declared {self.max_events}"
+                    f" (enabled={telemetry.enabled})",
+                )
 
     # --------------------------------------------------------------- guard
     def guard(self):
@@ -275,6 +314,18 @@ def verify_declared(verbose: bool = True) -> int:
         pending.block()
         eng.check_contract(c)
         report(c, None, f"rank-5 load + dispatch, stats {eng.stats}")
+    except Exception as e:  # noqa: BLE001
+        report(c, e, "")
+
+    # 4. Observability: the no-op Telemetry default is free (sub-contract
+    # per-span overhead) and silent (zero recorded events) — the guarantee
+    # that lets every layer accept a handle unconditionally.
+    from ..obs import Telemetry, noop_contract
+
+    c = noop_contract()
+    try:
+        c.check_telemetry(Telemetry.noop())
+        report(c, None, "no-op handle: spans free, event stream empty")
     except Exception as e:  # noqa: BLE001
         report(c, e, "")
 

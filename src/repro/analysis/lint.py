@@ -385,6 +385,59 @@ def _check_rep005(ctx: FileContext) -> Iterator[Finding]:
 
 
 # ---------------------------------------------------------------------------
+# REP006 — bare print in library code (route through the obs event log)
+# ---------------------------------------------------------------------------
+
+
+def _is_main_guard(test: ast.AST) -> bool:
+    """``if __name__ == "__main__":`` (either comparison order)."""
+    if not isinstance(test, ast.Compare):
+        return False
+    sides = [test.left, *test.comparators]
+    return any(isinstance(s, ast.Name) and s.id == "__name__" for s in sides)
+
+
+@_rule("REP006", "bare print( in library code — route output through repro.obs")
+def _check_rep006(ctx: FileContext) -> Iterator[Finding]:
+    # CLI/tooling surfaces where the terminal IS the interface are exempt:
+    # tools/ and examples/ trees wholesale, plus `main()` bodies and
+    # `if __name__ == "__main__":` blocks anywhere.
+    if "tools" in ctx.parts or "examples" in ctx.parts:
+        return
+    exempt: List[Tuple[int, int]] = []
+    for node in ast.walk(ctx.tree):
+        if (
+            isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and node.name == "main"
+        ):
+            exempt.append((node.lineno, node.end_lineno or node.lineno))
+    for node in ctx.tree.body:
+        if isinstance(node, ast.If) and _is_main_guard(node.test):
+            exempt.append((node.lineno, node.end_lineno or node.lineno))
+    # A print inside a jitted function is REP005's trace-time finding;
+    # flagging it here too would double-report the same line.
+    for fn, _ in ctx.jitted_functions():
+        exempt.append((fn.lineno, fn.end_lineno or fn.lineno))
+    for node in ast.walk(ctx.tree):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id == "print"
+        ):
+            if any(a <= node.lineno <= b for a, b in exempt):
+                continue
+            f = ctx.finding(
+                "REP006", node,
+                "bare `print(...)` in library code — record it on the obs "
+                "event log (repro.obs.Telemetry.event / registry) so run "
+                "output lands in the JSONL/Chrome-trace sinks, or justify "
+                "the CLI surface with `# REP006-ok: ...`",
+            )
+            if f:
+                yield f
+
+
+# ---------------------------------------------------------------------------
 # REP003 — kernel package trio (project-level rule)
 # ---------------------------------------------------------------------------
 

@@ -94,11 +94,13 @@ class RunCheckpointer:
         save_every: int = 1,
         keep_last: Optional[int] = 2,
         extra: Optional[Dict] = None,
+        telemetry=None,
     ):
         if save_every < 1:
             raise ValueError(f"save_every={save_every}: must be >= 1")
         if isinstance(store, (str, Path)):
-            store = CheckpointStore(store, keep_last=keep_last)
+            store = CheckpointStore(store, keep_last=keep_last,
+                                    telemetry=telemetry)
         self.store = store
         self.save_every = save_every
         self.extra = dict(extra or {})

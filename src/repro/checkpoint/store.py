@@ -35,6 +35,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from ..obs import Telemetry
+
 PyTree = Any
 
 # Manifest schema version. Bump when the manifest layout changes; restore
@@ -56,12 +58,17 @@ def _leaf_paths(tree: PyTree):
 
 
 class CheckpointStore:
-    def __init__(self, directory: str | Path, *, keep_last: Optional[int] = None):
+    def __init__(self, directory: str | Path, *, keep_last: Optional[int] = None,
+                 telemetry: Optional[Telemetry] = None):
         if keep_last is not None and keep_last < 1:
             raise ValueError(f"keep_last={keep_last}: must be >= 1 (or None)")
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep_last = keep_last
+        # Save/restore/prune spans + write-latency histograms. Writes happen
+        # on the daemon thread, so the handle's thread-safe event append is
+        # load-bearing here, not a nicety.
+        self.telemetry = telemetry if telemetry is not None else Telemetry.noop()
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[Tuple[int, Path, BaseException]] = None
         # Recover from a crash inside _write's overwrite window: an
@@ -79,10 +86,30 @@ class CheckpointStore:
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: PyTree, *, extra: Optional[Dict] = None) -> Path:
         self.wait()
-        host = jax.tree.map(lambda x: np.asarray(x), tree)
+        with self.telemetry.span("checkpoint.snapshot", "checkpoint", step=step):
+            host = jax.tree.map(lambda x: np.asarray(x), tree)
+        t0 = self.telemetry.now_us()
         out = self._write(step, host, extra or {})
+        self._record_write(step, host, t0)
         self._prune(keep=step)
         return out
+
+    def _record_write(self, step: int, host_tree: PyTree, t0_us: float) -> None:
+        """Stamp one completed write: a checkpoint.write span (started at
+        ``t0_us``, i.e. when ``_write`` began) plus the latency histogram.
+        Runs on whichever thread performed the write."""
+        tel = self.telemetry
+        if not tel.enabled:
+            return
+        dur = tel.now_us() - t0_us
+        nbytes = sum(
+            int(x.nbytes) for x in jax.tree_util.tree_leaves(host_tree)
+        )
+        tel.complete("checkpoint.write", "checkpoint", t0_us, dur,
+                     step=step, bytes=nbytes)
+        tel.registry.histogram("checkpoint.write_us").observe(dur)
+        tel.registry.counter("checkpoint.saves").inc()
+        tel.registry.counter("checkpoint.bytes").inc(nbytes)
 
     def save_async(self, step: int, tree: PyTree, *, extra: Optional[Dict] = None) -> None:
         """Snapshot to host memory now; write to disk on a background thread.
@@ -93,11 +120,14 @@ class CheckpointStore:
         would go unobserved.
         """
         self.wait()
-        host = jax.tree.map(lambda x: np.asarray(x), tree)  # D2H copy (blocking)
+        with self.telemetry.span("checkpoint.snapshot", "checkpoint", step=step):
+            host = jax.tree.map(lambda x: np.asarray(x), tree)  # D2H copy (blocking)
 
         def _run():
             try:
+                t0 = self.telemetry.now_us()
                 self._write(step, host, extra or {})
+                self._record_write(step, host, t0)
                 self._prune(keep=step)
             except BaseException as e:  # noqa: BLE001
                 self._error = (step, self.dir / f"step_{step:08d}", e)
@@ -127,8 +157,12 @@ class CheckpointStore:
         if self.keep_last is None:
             return
         steps = [s for s in self.steps() if s != keep]
-        for s in steps[: max(0, len(steps) + 1 - self.keep_last)]:
+        dropped = steps[: max(0, len(steps) + 1 - self.keep_last)]
+        for s in dropped:
             shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+        if dropped:
+            self.telemetry.event("checkpoint.prune", "checkpoint",
+                                 steps=dropped, keep=keep)
 
     def _write(self, step: int, host_tree: PyTree, extra: Dict) -> Path:
         out = self.dir / f"step_{step:08d}"
@@ -216,6 +250,10 @@ class CheckpointStore:
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         src = self.dir / f"step_{step:08d}"
+        with self.telemetry.span("checkpoint.restore", "checkpoint", step=step):
+            return self._restore(step, src, like=like, shardings=shardings)
+
+    def _restore(self, step, src, *, like, shardings) -> Tuple[int, PyTree, Dict]:
         manifest = json.loads((src / "manifest.json").read_text())
         fmt = manifest.get("format", 0)
         if fmt > MANIFEST_FORMAT:

@@ -35,12 +35,14 @@ measures against.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..compat import shard_map_compat
+from ..obs import Telemetry
 from . import low_rank
 from .frank_wolfe import (
     EpochAux,
@@ -337,6 +339,8 @@ def run_epochs(
     start_t: int = 0,
     initial_history: Optional[Dict[str, list]] = None,
     checkpointer=None,
+    telemetry: Optional[Telemetry] = None,
+    num_workers: int = 1,
 ) -> EngineResult:
     """Run up to ``num_epochs`` DFW-Trace epochs, device-resident.
 
@@ -371,6 +375,16 @@ def run_epochs(
     the full-run values — the plan is recomputed from ``start_t`` and the
     same executables re-dispatch, reproducing the uninterrupted trajectory
     bit-for-bit (pinned in ``tests/test_checkpoint_resume.py``).
+
+    **Telemetry.** ``telemetry`` (``repro.obs.Telemetry``; inert no-op when
+    None) records compile/dispatch/segment spans, per-executable comm cost
+    (analytic ``Reducer.wire_bytes`` vs dense logical bytes, scaled by
+    ``num_workers``, plus an HLO walk once per compile when the handle
+    wants it), per-epoch loss/gap/sigma/gamma counter samples, and the
+    early-stop instant. Every scalar rides a ``device_get`` the engine
+    already performs — enabling telemetry adds zero host syncs and zero
+    dispatches, which the contract pins in ``tests/test_engine.py`` verify
+    with an enabled handle under the transfer guard.
     """
     if mode not in ("scan", "legacy"):
         raise ValueError(f"mode={mode!r}: expected 'scan' or 'legacy'")
@@ -425,10 +439,11 @@ def run_epochs(
     }
     has_masks = masks is not None
     wrapper = segment_wrapper if segment_wrapper is not None else (lambda f: f)
+    tel = telemetry if telemetry is not None else Telemetry.noop()
 
     compiled: Dict[tuple, Callable] = {}
 
-    def get_compiled(seg: Segment) -> Callable:
+    def get_compiled(seg: Segment, args: tuple) -> Callable:
         sig = (seg.k, seg.length)
         if sig not in compiled:
             fn = _segment_step(
@@ -436,9 +451,54 @@ def run_epochs(
                 step_size=step_size, axis_name=axis_name, reducer=reducer,
                 gap_tol=gap_tol, has_masks=has_masks,
             )
-            compiled[sig] = jax.jit(wrapper(fn))
+            jitted = jax.jit(wrapper(fn))
+            if tel.wants_hlo:
+                # Ahead-of-time compile so the post-SPMD HLO is in hand for
+                # the one-time comm walk; the executable itself dispatches,
+                # so the compile is still counted (and paid) exactly once.
+                # jax.jit is kept on the non-HLO path because its call cache
+                # is independent of lower().compile() — mixing them would
+                # compile twice.
+                t0 = tel.now_us()
+                exe = jitted.lower(*args).compile()
+                tel.complete("engine.compile", "engine", t0,
+                             tel.now_us() - t0, k=seg.k, length=seg.length)
+                _emit_executable_cost(seg, exe)
+                compiled[sig] = exe
+            else:
+                compiled[sig] = jitted
             stats["compilations"] += 1
         return compiled[sig]
+
+    def _emit_executable_cost(seg: Segment, exe) -> None:
+        """One HLO walk per executable (never per step): wire-level
+        collective bytes/counts straight from the compiled module."""
+        try:
+            from ..analysis import hlo as hlo_lib
+
+            info = hlo_lib.analyze(exe.as_text())
+        except Exception:  # pragma: no cover - HLO text formats drift
+            return
+        tel.event(
+            "comm.executable", "comm", k=seg.k, length=seg.length,
+            hlo_collective_bytes=info["collective_bytes_total"],
+            hlo_collective_count={k: v for k, v in info["collective_count"].items()},
+            hlo_flops=info["flops"],
+        )
+
+    # Analytic per-segment comm cost: 2*K rounds per epoch (K psums of
+    # d-vectors + K of m-vectors), wire bytes from the reducer's own
+    # accounting, logical bytes at the dense-f32 convention.
+    def _comm_cost(seg: Segment) -> Dict[str, float]:
+        rounds = 2 * seg.k * seg.length
+        logical = 8.0 * (task.d + task.m) * seg.k * seg.length
+        wire = float(
+            seg.k * seg.length * (
+                reducer.wire_bytes(task.d, num_workers)
+                + reducer.wire_bytes(task.m, num_workers)
+            )
+        )
+        return {"rounds": rounds, "logical_bytes": logical, "wire_bytes": wire}
 
     carry = init_carry(state, iterate, key, comm_state, t=start_t)
     done = jnp.zeros((), jnp.bool_)
@@ -455,8 +515,25 @@ def run_epochs(
         if masks is None:
             return None
         if not host_masks_cache:
-            host_masks_cache.append(jax.device_get(masks))
+            with tel.span("engine.fetch", "engine", kind="masks"):
+                host_masks_cache.append(jax.device_get(masks))
             stats["host_syncs"] += 1
+            # Straggler accounting rides this one-time fetch (checkpoint
+            # payloads are the only consumer that forces it — when nothing
+            # fetches the masks, the counts are deliberately not observed
+            # rather than paying a sync for them).
+            hm = host_masks_cache[0]
+            if tel.enabled:
+                alive_hist = tel.registry.histogram("engine.alive_workers")
+                alive = [int((row > 0).sum()) for row in hm]
+                for a in alive:
+                    alive_hist.observe(a)
+                tel.event(
+                    "engine.straggler_masks", "engine",
+                    epochs=len(alive), num_workers=int(hm.shape[1]),
+                    min_alive=min(alive) if alive else None,
+                    mean_alive=sum(alive) / len(alive) if alive else None,
+                )
         return host_masks_cache[0]
 
     if mode == "legacy":
@@ -467,12 +544,18 @@ def run_epochs(
         epochs_run = start_t
         for i, seg in enumerate(segments):
             args = (carry, done, nrun) + ((masks,) if has_masks else ())
-            carry, done, nrun, aux = get_compiled(seg)(*args)
+            t_disp = tel.now_us()
+            carry, done, nrun, aux = get_compiled(seg, args)(*args)
             stats["dispatches"] += 1
             stats["segments_run"] += 1
             row = [float(aux.loss[0]), float(aux.gap[0]),
                    float(aux.sigma[0]), float(aux.gamma[0])]
             stats["host_syncs"] += 4
+            t_end = tel.now_us()
+            tel.complete("engine.segment", "engine", t_disp, t_end - t_disp,
+                         start=seg.start, length=seg.length, k=seg.k)
+            for name, val in zip(_HISTORY_KEYS, row):
+                tel.counter_sample(f"dfw.{name}", val, ts_us=t_end)
             for name, val in zip(_HISTORY_KEYS, row):
                 history[name].append(val)
             history["k"].append(seg.k)
@@ -491,6 +574,8 @@ def run_epochs(
                         masks=_host_masks(), done=stop,
                     )
             if stop:
+                tel.event("engine.early_stop", "engine", epoch=epochs_run,
+                          gap=row[1], gap_tol=gap_tol)
                 break
         return EngineResult(
             carry=carry, history=history, epochs_run=epochs_run, stats=stats
@@ -499,11 +584,54 @@ def run_epochs(
     # (Segment, host EpochAux | None, device EpochAux) per segment run; the
     # host slot is filled when a callback or checkpoint already fetched the
     # block, so the final history assembly never transfers the same rows
-    # twice.
+    # twice. ``seg_ts`` is the parallel dispatch-time list (us) and
+    # ``recorded`` the blocks whose telemetry has been emitted — both ride
+    # alongside rather than inside the tuples so ``_assemble_history``'s
+    # 3-tuple unpacking stays untouched.
     aux_blocks: List[tuple] = []
+    seg_ts: List[float] = []
+    recorded: set = set()
+
+    def _record_block(idx: int, t_end_us: float) -> None:
+        """Telemetry for a block whose host aux just landed: the segment
+        span (dispatch -> data on host), the comm-exchange span with
+        analytic byte accounting, and per-epoch scalar samples timestamped
+        by linear interpolation across the span. Pure bookkeeping on
+        already-fetched host values — no device access."""
+        if idx in recorded or not tel.enabled:
+            return
+        recorded.add(idx)
+        seg, host_aux, _ = aux_blocks[idx]
+        t0 = seg_ts[idx]
+        dur = max(t_end_us - t0, 0.0)
+        tel.complete("engine.segment", "engine", t0, dur,
+                     start=seg.start, length=seg.length, k=seg.k)
+        cost = _comm_cost(seg)
+        tel.complete("comm.exchange", "comm", t0, dur,
+                     spec=getattr(reducer, "spec", None),
+                     num_workers=num_workers, **cost)
+        reg = tel.registry
+        reg.counter("comm.rounds").inc(cost["rounds"])
+        reg.counter("comm.logical_bytes").inc(cost["logical_bytes"])
+        reg.counter("comm.wire_bytes").inc(cost["wire_bytes"])
+        for j in range(seg.length):
+            vals = [float(col[j]) for col in host_aux]
+            if math.isnan(vals[0]):  # lax.cond no-op filler past early stop
+                continue
+            ts = t0 + dur * (j + 1) / seg.length
+            for name, val in zip(_HISTORY_KEYS, vals):
+                tel.counter_sample(f"dfw.{name}", val, ts_us=ts)
+                reg.gauge(f"dfw.{name}").set(val)
+            reg.counter("engine.epochs").inc()
+
     for i, seg in enumerate(segments):
         args = (carry, done, nrun) + ((masks,) if has_masks else ())
-        carry, done, nrun, aux = get_compiled(seg)(*args)
+        exe = get_compiled(seg, args)
+        t_disp = tel.now_us()
+        carry, done, nrun, aux = exe(*args)
+        tel.complete("engine.dispatch", "engine", t_disp,
+                     tel.now_us() - t_disp, start=seg.start,
+                     length=seg.length, k=seg.k)
         stats["dispatches"] += 1
         stats["segments_run"] += 1
         host_aux = None
@@ -514,12 +642,16 @@ def run_epochs(
             # Without a callback or gap_tol, boundaries the checkpointer
             # does NOT want stay sync-free, preserving the dispatch
             # pipelining and the batched end-of-run aux fetch.
-            host_aux, host_done, host_nrun = jax.device_get((aux, done, nrun))
+            with tel.span("engine.fetch", "engine", kind="boundary"):
+                host_aux, host_done, host_nrun = jax.device_get((aux, done, nrun))
             stats["host_syncs"] += 1
             host_done = bool(host_done)
             if callback is not None:
                 callback(seg.start, host_aux)
         aux_blocks.append((seg, host_aux, aux))
+        seg_ts.append(t_disp)
+        if host_aux is not None:
+            _record_block(i, tel.now_us())
         if checkpointer is not None:
             last = bool(host_done) or i == len(segments) - 1
             if checkpointer.want(i, last):
@@ -530,13 +662,17 @@ def run_epochs(
                 pending_idx = [
                     j for j, (_, h, _) in enumerate(aux_blocks) if h is None
                 ]
-                host_carry, pend, host_done, host_nrun = jax.device_get(
-                    (carry, [aux_blocks[j][2] for j in pending_idx], done, nrun)
-                )
+                with tel.span("engine.fetch", "engine", kind="checkpoint"):
+                    host_carry, pend, host_done, host_nrun = jax.device_get(
+                        (carry, [aux_blocks[j][2] for j in pending_idx], done, nrun)
+                    )
                 stats["host_syncs"] += 1
                 host_done = bool(host_done)
                 for j, h in zip(pending_idx, pend):
                     aux_blocks[j] = (aux_blocks[j][0], h, aux_blocks[j][2])
+                t_fetch = tel.now_us()
+                for j in pending_idx:
+                    _record_block(j, t_fetch)
                 t_now = int(host_nrun)
                 checkpointer.save_segment(
                     t=t_now, carry=host_carry,
@@ -548,19 +684,28 @@ def run_epochs(
                 # The only mid-run sync: one scalar at the segment boundary,
                 # deciding whether to launch the next segment.
                 stats["host_syncs"] += 1
-                host_done = bool(jax.device_get(done))
+                with tel.span("engine.fetch", "engine", kind="done-flag"):
+                    host_done = bool(jax.device_get(done))
             if host_done:
                 break
 
     pending = [a for _, h, a in aux_blocks if h is None]
-    fetched, epochs_run = jax.device_get((pending, nrun))
+    with tel.span("engine.fetch", "engine", kind="final"):
+        fetched, epochs_run = jax.device_get((pending, nrun))
     stats["host_syncs"] += 1
+    t_final = tel.now_us()
     epochs_run = int(epochs_run)
     it = iter(fetched)
     aux_blocks = [
         (seg, h if h is not None else next(it), a) for seg, h, a in aux_blocks
     ]
+    for j in range(len(aux_blocks)):
+        _record_block(j, t_final)
     history = _assemble_history(history, aux_blocks, epochs_run)
+    if gap_tol is not None and epochs_run < num_epochs:
+        gap_hist = history.get("gap") or [float("nan")]
+        tel.event("engine.early_stop", "engine", epoch=epochs_run,
+                  gap=gap_hist[-1], gap_tol=gap_tol)
     return EngineResult(
         carry=carry, history=history, epochs_run=epochs_run, stats=stats
     )

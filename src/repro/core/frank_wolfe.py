@@ -256,6 +256,8 @@ def fit(
     start_t: int = 0,
     initial_history: Optional[Dict[str, list]] = None,
     checkpointer=None,
+    telemetry=None,
+    num_workers: int = 1,
 ) -> FitResult:
     """Run DFW-TRACE for up to ``num_epochs`` on the device-resident engine.
 
@@ -311,9 +313,16 @@ def fit(
     ``initial_history`` its history — and the run continues bit-exactly
     (see ``core/engine.run_epochs`` and ``tests/test_checkpoint_resume``;
     ``launch/dfw.fit`` wires this end to end via ``DFWConfig.resume_from``).
+
+    ``telemetry`` (``repro.obs.Telemetry``; inert default) is handed to the
+    engine for its zero-sync span/metric stream and brackets the final-loss
+    eval here; ``num_workers`` only scales the analytic comm byte
+    accounting — it never changes the math.
     """
     from .engine import run_epochs  # local import: engine builds on this module
+    from ..obs import Telemetry
 
+    tel = telemetry if telemetry is not None else Telemetry.noop()
     eres = run_epochs(
         task,
         state,
@@ -335,17 +344,23 @@ def fit(
         start_t=start_t,
         initial_history=initial_history,
         checkpointer=checkpointer,
+        telemetry=tel,
+        num_workers=num_workers,
     )
     if checkpointer is not None:
         # Join the last async write so its failure surfaces with the run,
         # not silently at interpreter exit.
-        checkpointer.wait()
+        with tel.span("checkpoint.join", "checkpoint"):
+            checkpointer.wait()
     # Loss at the *returned* iterate (cheap: one O(n_j) reduction outside the
     # epoch; on sharded state the plain sum is already the global loss).
-    final_loss = float(jax.device_get(jax.jit(task.local_loss)(eres.carry.state)))
+    with tel.span("engine.final_loss", "engine"):
+        final_loss = float(jax.device_get(jax.jit(task.local_loss)(eres.carry.state)))
     eres.stats["dispatches"] += 1
     eres.stats["host_syncs"] += 1
     eres.stats["compilations"] += 1
+    if tel.enabled:
+        tel.registry.gauge("dfw.final_loss").set(final_loss)
     return FitResult(
         iterate=eres.carry.iterate,
         state=eres.carry.state,

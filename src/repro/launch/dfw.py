@@ -53,6 +53,7 @@ from ..checkpoint import dfw as ckpt
 from ..compat import shard_map_compat
 from ..core import engine, frank_wolfe, low_rank, tasks
 from ..core.frank_wolfe import EpochAux
+from ..obs import Telemetry
 from ..core.power_method import sphere_vector
 from ..kernels.mc_matvec import ops as mc_ops
 from ..kernels.power_matvec import ops as pm_ops
@@ -119,6 +120,16 @@ class DFWConfig:
 
     Note ``block_epochs`` bounds the work a crash can lose: an unbroken
     ``const:K`` run is a single segment and only checkpoints at its end.
+
+    **Telemetry.** ``telemetry`` (a ``repro.obs.Telemetry``; None = inert
+    no-op) turns on the zero-sync observability spine: engine segment/
+    dispatch spans, per-epoch loss/gap/sigma/gamma samples riding the
+    existing boundary fetches, analytic + HLO comm byte accounting,
+    checkpoint save/prune spans, and — when the handle's ``profiler_dir``
+    is set — a ``jax.profiler`` XLA capture bracketing the epoch loop.
+    Export with ``telemetry.write_jsonl(...)`` /
+    ``telemetry.write_chrome_trace(...)`` after the run
+    (docs/OBSERVABILITY.md).
     """
 
     mu: float
@@ -142,6 +153,7 @@ class DFWConfig:
     checkpoint_keep: Optional[int] = 2  # retained steps (None = all)
     resume_from: Optional[str] = None  # checkpoint dir to restore from
     resume_step: Optional[int] = None  # exact step (default: latest)
+    telemetry: Optional[Any] = None  # repro.obs.Telemetry (None = no-op)
 
 
 @dataclasses.dataclass
@@ -491,7 +503,7 @@ def _resume_complete(snap: ckpt.RunSnapshot, cfg: DFWConfig) -> bool:
 
 
 def _make_checkpointer(
-    task, cfg: DFWConfig, nw: int, comm_spec: str
+    task, cfg: DFWConfig, nw: int, comm_spec: str, telemetry=None
 ) -> Optional[ckpt.RunCheckpointer]:
     if cfg.checkpoint_dir is None:
         return None
@@ -499,6 +511,7 @@ def _make_checkpointer(
         cfg.checkpoint_dir,
         save_every=cfg.checkpoint_every,
         keep_last=cfg.checkpoint_keep,
+        telemetry=telemetry,
         extra=ckpt.run_extra(
             task,
             num_workers=nw,
@@ -553,6 +566,11 @@ def fit(
         )
     nw = mesh.shape[cfg.data_axis]
     max_rank = engine.resolve_max_rank(cfg.max_rank, cfg.num_epochs)
+    tel = cfg.telemetry if cfg.telemetry is not None else Telemetry.noop()
+    tel.event("run.start", "run", driver="launch.dfw.fit",
+              task=type(task).__name__, d=int(task.d), m=int(task.m),
+              num_workers=nw, comm=cfg.comm, schedule=cfg.schedule,
+              num_epochs=cfg.num_epochs)
 
     # One reducer for every encoding — "dense" is the exact-psum reducer
     # whose per-worker state is (), keeping the carry structure uniform.
@@ -659,7 +677,7 @@ def fit(
                        "dispatches": 1, "compilations": 1, "host_syncs": 1},
             )
 
-    checkpointer = _make_checkpointer(task, cfg, nw, reducer.spec)
+    checkpointer = _make_checkpointer(task, cfg, nw, reducer.spec, tel)
     if checkpointer is not None:
         # checkpoint_dir belongs to THIS run's timeline from here on: a
         # fresh run clears any previous run's steps, a resume keeps its
@@ -675,39 +693,44 @@ def fit(
         comm_state_example=comm_example,
         has_masks=True,
     )
-    eres = engine.run_epochs(
-        ktask,
-        state,
-        mu=cfg.mu,
-        num_epochs=cfg.num_epochs,
-        key=key,
-        schedule=cfg.schedule,
-        step_size=cfg.step_size,
-        axis_name=cfg.data_axis,
-        reducer=reducer,
-        comm_state=comm_state,
-        iterate=it,
-        masks=masks,
-        gap_tol=cfg.gap_tol,
-        block_epochs=cfg.block_epochs,
-        segment_wrapper=wrapper,
-        callback=callback,
-        mode=cfg.engine,
-        start_t=start_t,
-        initial_history=initial_history,
-        checkpointer=checkpointer,
-    )
+    with tel.profiler():
+        eres = engine.run_epochs(
+            ktask,
+            state,
+            mu=cfg.mu,
+            num_epochs=cfg.num_epochs,
+            key=key,
+            schedule=cfg.schedule,
+            step_size=cfg.step_size,
+            axis_name=cfg.data_axis,
+            reducer=reducer,
+            comm_state=comm_state,
+            iterate=it,
+            masks=masks,
+            gap_tol=cfg.gap_tol,
+            block_epochs=cfg.block_epochs,
+            segment_wrapper=wrapper,
+            callback=callback,
+            mode=cfg.engine,
+            start_t=start_t,
+            initial_history=initial_history,
+            checkpointer=checkpointer,
+            telemetry=tel,
+            num_workers=nw,
+        )
     if checkpointer is not None:
         # Surface the last in-flight write's failure here, not silently at
         # interpreter exit — the run result should not claim durability the
         # store never achieved.
-        checkpointer.wait()
+        with tel.span("checkpoint.join", "checkpoint"):
+            checkpointer.wait()
     # Loss at the returned iterate (history is pre-update; see frank_wolfe.fit).
     # The plain sum over the row-sharded state is already the global loss, and
     # straggler weights never apply here: this is the true full-data F.
-    final_loss = float(
-        jax.device_get(jax.jit(ktask.local_loss)(eres.carry.state))
-    )
+    with tel.span("engine.final_loss", "engine"):
+        final_loss = float(
+            jax.device_get(jax.jit(ktask.local_loss)(eres.carry.state))
+        )
     eres.stats["dispatches"] += 1
     eres.stats["host_syncs"] += 1
     eres.stats["compilations"] += 1
@@ -788,7 +811,7 @@ def fit_serial(
                 stats={"segments_planned": 0, "segments_run": 0,
                        "dispatches": 1, "compilations": 1, "host_syncs": 1},
             )
-    checkpointer = _make_checkpointer(task, cfg, 1, reducer.spec)
+    checkpointer = _make_checkpointer(task, cfg, 1, reducer.spec, cfg.telemetry)
     if checkpointer is not None:
         # As in `fit`: the dir is this run's timeline — drop steps past
         # start_t (all of them, for a fresh run).
@@ -812,6 +835,7 @@ def fit_serial(
         start_t=start_t,
         initial_history=initial_history,
         checkpointer=checkpointer,
+        telemetry=cfg.telemetry,
     )
     return DFWFitResult(
         iterate=res.iterate, state=res.state, history=res.history, masks=None,

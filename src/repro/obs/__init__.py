@@ -1,0 +1,29 @@
+"""repro.obs: zero-sync telemetry spine (metrics, spans, trace export).
+
+Public surface:
+
+* :class:`MetricsRegistry` / :class:`Counter` / :class:`Gauge` /
+  :class:`Histogram` — process-local aggregates with ``snapshot()`` and
+  ``reset()``.
+* :class:`Telemetry` — the handle threaded through ``DFWConfig``,
+  ``frank_wolfe.fit`` and ``ServeConfig``: span tracing, instant events,
+  counter samples, JSONL + Chrome-trace sinks, ``jax.profiler`` hook.
+  ``Telemetry.noop()`` is the inert default.
+* :func:`noop_contract` — the ``analysis/contracts.py`` clause pinning
+  the no-op handle's overhead (``make analyze`` probe 4).
+
+Design rule (see docs/OBSERVABILITY.md): this package imports only the
+standard library; instrumentation never adds a host sync — every scalar
+recorded here was already on the host.
+"""
+from .registry import Counter, Gauge, Histogram, MetricsRegistry
+from .telemetry import Telemetry, noop_contract
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Telemetry",
+    "noop_contract",
+]

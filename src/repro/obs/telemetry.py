@@ -1,0 +1,258 @@
+"""Span tracing + event stream with JSONL and Chrome-trace sinks.
+
+A :class:`Telemetry` handle is the single object threaded through
+``DFWConfig``, ``frank_wolfe.fit`` and ``ServeConfig``. It owns
+
+* a :class:`~repro.obs.registry.MetricsRegistry` (aggregates),
+* a bounded in-memory event stream (the timeline), and
+* export sinks: ``write_jsonl`` (one JSON object per line) and
+  ``write_chrome_trace`` (a ``chrome://tracing`` / Perfetto-loadable
+  trace), plus an optional ``jax.profiler`` hook for XLA-level capture.
+
+Zero-sync discipline: nothing in this module touches a device value.
+Instrumentation sites hand in host scalars they already have — engine
+epoch scalars ride the existing segment-boundary ``device_get``, comm
+bytes are computed analytically / from HLO once per executable, and
+checkpoint latency is stamped on the writer thread. The no-op handle
+(``Telemetry.noop()``) records nothing and allocates nothing per call;
+its overhead is pinned by ``analysis/contracts.py`` via
+:func:`noop_contract`.
+
+Events are stored in Chrome trace-event form (ph "X" complete spans,
+"i" instants, "C" counter samples) so both sinks serialize the same
+dicts; timestamps are microseconds from the handle's creation
+(``time.perf_counter`` based — monotonic, sub-us resolution).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from contextlib import contextmanager
+from typing import Any, Dict, List, Optional
+
+from .registry import MetricsRegistry
+
+__all__ = ["Telemetry", "noop_contract"]
+
+
+class _NullSpan:
+    """Shared do-nothing span returned by a disabled handle."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    """Context manager emitting one ph="X" complete event on exit."""
+
+    __slots__ = ("_tel", "_name", "_cat", "_t0", "_args")
+
+    def __init__(self, tel: "Telemetry", name: str, cat: str,
+                 t0: Optional[float], args: Dict[str, Any]):
+        self._tel = tel
+        self._name = name
+        self._cat = cat
+        self._t0 = t0
+        self._args = args
+
+    def __enter__(self):
+        if self._t0 is None:
+            self._t0 = self._tel.now_us()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self._tel.complete(self._name, self._cat, self._t0,
+                           self._tel.now_us() - self._t0, **self._args)
+        return False
+
+
+class Telemetry:
+    """Run-wide telemetry handle (metrics registry + event stream + sinks).
+
+    Parameters
+    ----------
+    enabled:
+        When False the handle is inert: every record call is a cheap
+        no-op, ``span()`` returns a shared null context manager, and the
+        event stream stays empty. ``Telemetry.noop()`` returns a module
+        singleton built this way.
+    capture_hlo:
+        Allow instrumentation sites to take the ahead-of-time compile
+        path and run ``analysis/hlo.py`` over each executable (once per
+        compile, never per step). Off by default only on the noop handle.
+    max_events:
+        Hard cap on the in-memory stream; past it events are counted as
+        dropped rather than appended, so a runaway loop cannot exhaust
+        host memory.
+    profiler_dir:
+        When set, ``profiler()`` brackets the run with
+        ``jax.profiler.start_trace/stop_trace`` writing XLA-level data
+        there; when None the hook is a no-op.
+    """
+
+    def __init__(self, enabled: bool = True, *, capture_hlo: bool = True,
+                 max_events: int = 200_000,
+                 profiler_dir: Optional[str] = None):
+        self.enabled = bool(enabled)
+        self.capture_hlo = bool(capture_hlo)
+        self.max_events = int(max_events)
+        self.profiler_dir = profiler_dir
+        self.registry = MetricsRegistry()
+        self._events: List[Dict[str, Any]] = []
+        self._dropped = 0
+        self._lock = threading.Lock()  # checkpoint writer thread emits too
+        self._pid = os.getpid()
+        self._t0_perf = time.perf_counter()
+        self._t0_unix = time.time()
+
+    # -- time ---------------------------------------------------------------
+
+    def now_us(self) -> float:
+        """Microseconds since this handle was created (monotonic)."""
+        return (time.perf_counter() - self._t0_perf) * 1e6
+
+    # -- recording ----------------------------------------------------------
+
+    @property
+    def wants_hlo(self) -> bool:
+        return self.enabled and self.capture_hlo
+
+    def _append(self, ev: Dict[str, Any]) -> None:
+        # Lock-free on the common path: list.append is atomic under the
+        # GIL, which is all the concurrent checkpoint-writer thread needs.
+        # The cap check races benignly — a burst can overshoot max_events
+        # by at most one event per appending thread. Measured in situ this
+        # halves the per-event cost on the serving fetch path.
+        if len(self._events) < self.max_events:
+            self._events.append(ev)
+        else:
+            with self._lock:
+                self._dropped += 1
+
+    def span(self, name: str, cat: str = "run",
+             t0: Optional[float] = None, **args: Any):
+        """Context manager producing a complete ("X") event on exit.
+
+        ``t0`` (microseconds, from :meth:`now_us`) backdates the span
+        start — used when the enclosing work began before the handle
+        could be consulted (e.g. a dispatch whose wall time is only
+        known at the blocking fetch).
+        """
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, cat, t0, args)
+
+    def complete(self, name: str, cat: str, ts_us: float, dur_us: float,
+                 **args: Any) -> None:
+        """Record a retroactive complete span [ts_us, ts_us + dur_us]."""
+        if not self.enabled:
+            return
+        self._append({"name": name, "cat": cat, "ph": "X",
+                      "ts": round(ts_us, 3), "dur": round(max(dur_us, 0.0), 3),
+                      "pid": self._pid, "tid": threading.get_ident(),
+                      "args": args})
+
+    def event(self, name: str, cat: str = "run",
+              ts_us: Optional[float] = None, **args: Any) -> None:
+        """Record an instant ("i") event, e.g. early_stop or hot_swap."""
+        if not self.enabled:
+            return
+        self._append({"name": name, "cat": cat, "ph": "i", "s": "t",
+                      "ts": round(self.now_us() if ts_us is None else ts_us, 3),
+                      "pid": self._pid, "tid": threading.get_ident(),
+                      "args": args})
+
+    def counter_sample(self, name: str, value: float, cat: str = "metrics",
+                       ts_us: Optional[float] = None) -> None:
+        """Record a ph="C" counter sample (renders as a track in Perfetto)."""
+        if not self.enabled:
+            return
+        self._append({"name": name, "cat": cat, "ph": "C",
+                      "ts": round(self.now_us() if ts_us is None else ts_us, 3),
+                      "pid": self._pid, "tid": 0,
+                      "args": {"value": value}})
+
+    def event_count(self) -> int:
+        with self._lock:
+            return len(self._events)
+
+    def events(self) -> List[Dict[str, Any]]:
+        """Copy of the event stream (Chrome trace-event dicts)."""
+        with self._lock:
+            return list(self._events)
+
+    # -- jax.profiler hook --------------------------------------------------
+
+    @contextmanager
+    def profiler(self):
+        """Bracket a region with XLA-level capture when profiler_dir is set."""
+        if not (self.enabled and self.profiler_dir):
+            yield
+            return
+        import jax
+
+        jax.profiler.start_trace(self.profiler_dir)
+        try:
+            yield
+        finally:
+            jax.profiler.stop_trace()
+
+    # -- sinks --------------------------------------------------------------
+
+    def _meta(self) -> Dict[str, Any]:
+        return {"type": "meta", "t0_unix": self._t0_unix, "pid": self._pid,
+                "clock": "us_since_start", "dropped_events": self._dropped,
+                "max_events": self.max_events}
+
+    def write_jsonl(self, path) -> None:
+        """One JSON object per line: meta, then events, then a final
+        ``{"type": "metrics", ...}`` registry snapshot."""
+        events = self.events()
+        with open(path, "w") as fh:
+            fh.write(json.dumps(self._meta()) + "\n")
+            for ev in events:
+                fh.write(json.dumps(ev) + "\n")
+            fh.write(json.dumps({"type": "metrics",
+                                 "data": self.registry.snapshot()}) + "\n")
+
+    def write_chrome_trace(self, path) -> None:
+        """Chrome trace JSON (open in Perfetto / chrome://tracing)."""
+        doc = {
+            "traceEvents": self.events(),
+            "displayTimeUnit": "ms",
+            "otherData": {"meta": self._meta(),
+                          "metrics": self.registry.snapshot()},
+        }
+        with open(path, "w") as fh:
+            json.dump(doc, fh)
+
+    # -- no-op singleton ----------------------------------------------------
+
+    _NOOP: Optional["Telemetry"] = None
+
+    @classmethod
+    def noop(cls) -> "Telemetry":
+        """Shared inert handle — the default everywhere a Telemetry is
+        accepted. Records nothing; its per-span overhead is contract-pinned."""
+        if cls._NOOP is None:
+            cls._NOOP = cls(enabled=False, capture_hlo=False, max_events=0)
+        return cls._NOOP
+
+
+def noop_contract():
+    """Contract pinning the disabled handle: sub-50us span entry/exit and
+    a permanently empty event stream. Checked by ``make analyze`` probe 4."""
+    from repro.analysis.contracts import Contract
+
+    return Contract(name="obs.noop_overhead", max_noop_span_us=50.0,
+                    max_events=0)

@@ -210,8 +210,56 @@ def test_rep005_print_and_traced_fstring(tmp_path):
             print(f"fine here {x}")
             return x
     """)
-    assert _codes(findings) == ["REP005", "REP005"]
-    assert {f.line for f in findings} == {6, 7}
+    # The jitted prints are REP005's domain (and exempt from REP006); the
+    # bare print in the plain function is library-code output -> REP006.
+    assert _codes(findings) == ["REP005", "REP005", "REP006"]
+    assert {f.line for f in findings if f.code == "REP005"} == {6, 7}
+    assert [f.line for f in findings if f.code == "REP006"] == [11]
+
+
+# ---------------------------------------------------------------------------
+# REP006 — bare print in library code
+# ---------------------------------------------------------------------------
+
+
+def test_rep006_flags_library_prints_only(tmp_path):
+    src = """
+        def helper(x):
+            print("debug", x)
+            return x
+    """
+    assert _codes(_lint_src(tmp_path, "core/util.py", src)) == ["REP006"]
+    # tools/ and examples/ are CLI/demo surfaces — out of scope
+    assert _codes(_lint_src(tmp_path, "tools/report.py", src)) == []
+    assert _codes(_lint_src(tmp_path, "examples/demo.py", src)) == []
+
+
+def test_rep006_exempts_main_bodies_and_dunder_main(tmp_path):
+    findings = _lint_src(tmp_path, "launch/cli.py", """
+        def work(x):
+            return x * 2
+
+        def main():
+            print("result:", work(21))
+
+        if __name__ == "__main__":
+            print("starting")
+            main()
+    """)
+    assert _codes(findings) == []
+
+
+def test_rep006_inline_allow_requires_a_reason(tmp_path):
+    bare = _lint_src(tmp_path, "core/a6.py", """
+        def f(x):
+            print(x)  # REP006-ok:
+    """)
+    assert _codes(bare) == ["REP006"]
+    justified = _lint_src(tmp_path, "core/b6.py", """
+        def f(x):
+            print(x)  # REP006-ok: one-shot migration warning, stderr-free env
+    """)
+    assert _codes(justified) == []
 
 
 # ---------------------------------------------------------------------------

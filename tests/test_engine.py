@@ -238,6 +238,32 @@ def test_serial_const2_is_two_dispatches_o1_syncs():
     assert legacy.stats["host_syncs"] >= 4 * 30
 
 
+def test_serial_const2_pin_holds_with_telemetry_enabled():
+    """The acceptance bar for the obs spine: a live Telemetry handle keeps
+    the exact same dispatch/compile/host-sync stats under the same transfer
+    guard — instrumentation rides existing transfers, it never adds one —
+    and the trajectory is bit-identical to the uninstrumented run."""
+    from repro.obs import Telemetry
+
+    x, y = _mtls(jax.random.PRNGKey(8))
+    task = tasks.MultiTaskLeastSquares(d=24, m=18)
+    base = frank_wolfe.fit(task, task.init_state(x, y), mu=1.0, num_epochs=30,
+                           key=jax.random.PRNGKey(1), step_size="linesearch")
+    tel = Telemetry()
+    contract = engine.dispatch_contract()
+    with contract.guard():
+        res = frank_wolfe.fit(task, task.init_state(x, y), mu=1.0,
+                              num_epochs=30, key=jax.random.PRNGKey(1),
+                              step_size="linesearch", telemetry=tel)
+    assert res.epochs_run == 30
+    contract.check_stats(res.stats)
+    assert res.stats == base.stats
+    np.testing.assert_array_equal(np.asarray(res.history["loss"]),
+                                  np.asarray(base.history["loss"]))
+    names = {ev["name"] for ev in tel.events()}
+    assert {"engine.segment", "engine.dispatch", "comm.exchange"} <= names
+
+
 def test_log_schedule_is_olog_dispatches():
     n_segments = len(engine.plan_segments("log", 30))
     contract = engine.dispatch_contract(segments=n_segments,

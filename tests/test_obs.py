@@ -1,0 +1,306 @@
+"""Telemetry spine (repro/obs): registry semantics, event stream, sinks,
+and the zero-sync instrumentation riding the engine / checkpoint / serving
+layers. Multi-device coverage runs in a subprocess with 8 fake CPU devices
+(same pattern as tests/test_engine.py — device count locks at first jax
+init in the main pytest process).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import frank_wolfe, tasks
+from repro.obs import Histogram, MetricsRegistry, Telemetry, noop_contract
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def _run(script: str, timeout=900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr[-4000:]}"
+    return res.stdout
+
+
+def _mtls(key, n=400, d=24, m=18):
+    kx, kw = jax.random.split(key)
+    w = jax.random.normal(kw, (d, m))
+    w = w / jnp.linalg.norm(w, ord="nuc")
+    x = jax.random.normal(kx, (n, d))
+    return x, x @ w
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_get_or_create_returns_same_instrument():
+    reg = MetricsRegistry()
+    assert reg.counter("a") is reg.counter("a")
+    assert reg.gauge("g") is reg.gauge("g")
+    assert reg.histogram("h") is reg.histogram("h")
+    reg.counter("a").inc(3)
+    assert reg.snapshot()["counters"]["a"] == 3.0
+
+
+def test_registry_reset_zeroes_in_place_keeping_handles():
+    reg = MetricsRegistry()
+    c, g, h = reg.counter("c"), reg.gauge("g"), reg.histogram("h")
+    c.inc(5)
+    g.set(1.5)
+    h.observe(100.0)
+    reg.reset()
+    assert c.value == 0.0 and g.value is None and h.count == 0
+    c.inc()  # the old handle still feeds the registry
+    assert reg.snapshot()["counters"]["c"] == 1.0
+
+
+def test_histogram_log2_buckets_and_summary():
+    h = Histogram("lat")
+    for v in (0.5, 1.0, 3.0, 1000.0):
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == 4
+    assert snap["min"] == 0.5 and snap["max"] == 1000.0
+    assert snap["mean"] == pytest.approx((0.5 + 1 + 3 + 1000) / 4)
+    # 0.5 -> bucket 0; 1.0 -> [1,2) bucket 1; 3.0 -> [2,4) bucket 2;
+    # 1000 -> [512,1024) bucket 10
+    assert snap["buckets"] == {"0": 1, "1": 1, "2": 1, "10": 1}
+
+
+# ---------------------------------------------------------------------------
+# Telemetry handle: events, bounds, no-op
+# ---------------------------------------------------------------------------
+
+
+def test_span_and_event_forms():
+    tel = Telemetry()
+    with tel.span("work", "test", detail=7):
+        pass
+    tel.event("marker", "test", note="x")
+    tel.counter_sample("metric", 3.0)
+    phs = [ev["ph"] for ev in tel.events()]
+    assert phs == ["X", "i", "C"]
+    span = tel.events()[0]
+    assert span["name"] == "work" and span["args"] == {"detail": 7}
+    assert span["dur"] >= 0.0
+
+
+def test_event_stream_is_bounded_and_counts_drops():
+    tel = Telemetry(max_events=3)
+    for i in range(5):
+        tel.event(f"e{i}")
+    assert tel.event_count() == 3
+    assert tel._meta()["dropped_events"] == 2
+
+
+def test_noop_is_a_singleton_and_records_nothing():
+    tel = Telemetry.noop()
+    assert tel is Telemetry.noop()
+    assert not tel.enabled and not tel.wants_hlo
+    with tel.span("x"):
+        pass
+    tel.event("y")
+    tel.complete("z", "c", 0.0, 1.0)
+    assert tel.event_count() == 0
+    # the declared contract agrees: spans free, stream empty
+    noop_contract().check_telemetry(tel)
+
+
+def test_noop_contract_rejects_an_enabled_handle():
+    with pytest.raises(AssertionError):
+        noop_contract().check_telemetry(Telemetry())
+
+
+# ---------------------------------------------------------------------------
+# Sinks: JSONL + Chrome trace from a real instrumented fit
+# ---------------------------------------------------------------------------
+
+
+def _instrumented_fit(tel, num_epochs=12, gap_tol=None, block_epochs=None):
+    x, y = _mtls(jax.random.PRNGKey(3))
+    task = tasks.MultiTaskLeastSquares(d=24, m=18)
+    return frank_wolfe.fit(
+        task, task.init_state(x, y), mu=1.0, num_epochs=num_epochs,
+        key=jax.random.PRNGKey(1), step_size="linesearch",
+        gap_tol=gap_tol, block_epochs=block_epochs, telemetry=tel,
+    )
+
+
+def test_fit_emits_engine_and_comm_events_and_metrics():
+    tel = Telemetry()
+    res = _instrumented_fit(tel, num_epochs=12)
+    names = {ev["name"] for ev in tel.events()}
+    assert {"engine.compile", "engine.dispatch", "engine.segment",
+            "engine.fetch", "comm.exchange", "engine.final_loss"} <= names
+    # per-epoch scalars ride the boundary fetch: one sample per epoch
+    loss_samples = [ev for ev in tel.events() if ev["name"] == "dfw.loss"]
+    assert len(loss_samples) == res.epochs_run == 12
+    snap = tel.registry.snapshot()
+    assert snap["counters"]["engine.epochs"] == 12
+    assert snap["counters"]["comm.rounds"] > 0
+    assert snap["gauges"]["dfw.final_loss"] == pytest.approx(
+        res.final_loss, rel=1e-5)
+
+
+def test_jsonl_and_chrome_trace_sinks_are_valid(tmp_path):
+    tel = Telemetry()
+    _instrumented_fit(tel, num_epochs=8)
+    jl = tmp_path / "run.jsonl"
+    ct = tmp_path / "run.trace.json"
+    tel.write_jsonl(jl)
+    tel.write_chrome_trace(ct)
+
+    lines = [json.loads(s) for s in jl.read_text().splitlines()]
+    assert lines[0]["type"] == "meta" and lines[-1]["type"] == "metrics"
+    assert len(lines) - 2 == tel.event_count()
+
+    doc = json.loads(ct.read_text())
+    evs = doc["traceEvents"]
+    assert len(evs) == tel.event_count()
+    assert {ev["ph"] for ev in evs} <= {"X", "i", "C"}
+    for ev in evs:  # Perfetto's minimum: name/ph/ts/pid on every event
+        assert {"name", "ph", "ts", "pid"} <= set(ev)
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# Early stop: event epoch == epochs_run == truncated history (serial + 8-way)
+# ---------------------------------------------------------------------------
+
+
+def test_early_stop_event_matches_truncated_history_serial():
+    # a tolerance that certifiably fires mid-run: 40% of the starting gap
+    full = _instrumented_fit(Telemetry.noop(), num_epochs=40)
+    tol = float(full.history["gap"][0]) * 0.4
+    tel = Telemetry()
+    res = _instrumented_fit(tel, num_epochs=40, gap_tol=tol, block_epochs=5)
+    assert res.epochs_run < 40
+    stops = [ev for ev in tel.events() if ev["name"] == "engine.early_stop"]
+    assert len(stops) == 1
+    assert stops[0]["args"]["epoch"] == res.epochs_run
+    assert len(res.history["loss"]) == res.epochs_run
+    # and no telemetry rows for the cond-skipped NaN epochs past the stop
+    loss_samples = [ev for ev in tel.events() if ev["name"] == "dfw.loss"]
+    assert len(loss_samples) == res.epochs_run
+
+
+def test_early_stop_event_matches_truncated_history_8way():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import tasks
+        from repro.launch import dfw
+        from repro.obs import Telemetry
+
+        n, d, m = 1600, 40, 30
+        key = jax.random.PRNGKey(0)
+        kx, kw = jax.random.split(key)
+        W = jax.random.normal(kw, (d, m)); W = W / jnp.linalg.norm(W, ord="nuc")
+        X = jax.random.normal(kx, (n, d)); Y = X @ W
+        task = tasks.MultiTaskLeastSquares(d=d, m=m)
+        full = dfw.fit(task, X, Y,
+                       cfg=dfw.DFWConfig(mu=1.0, num_epochs=40,
+                                         schedule="const:2",
+                                         step_size="linesearch"),
+                       key=jax.random.PRNGKey(1), num_workers=8)
+        tol = float(full.history["gap"][0]) * 0.4
+        tel = Telemetry()
+        cfg = dfw.DFWConfig(mu=1.0, num_epochs=40, schedule="const:2",
+                            step_size="linesearch", gap_tol=tol,
+                            block_epochs=5, telemetry=tel)
+        res = dfw.fit(task, X, Y, cfg=cfg, key=jax.random.PRNGKey(1),
+                      num_workers=8)
+        assert res.epochs_run < 40
+        stops = [ev for ev in tel.events() if ev["name"] == "engine.early_stop"]
+        assert len(stops) == 1, [ev["name"] for ev in tel.events()]
+        assert stops[0]["args"]["epoch"] == res.epochs_run
+        assert len(res.history["loss"]) == res.epochs_run
+        losses = [ev for ev in tel.events() if ev["name"] == "dfw.loss"]
+        assert len(losses) == res.epochs_run
+        print("8-way early-stop telemetry OK", res.epochs_run)
+    """)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint + serving instrumentation
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_store_stamps_writes_and_prunes(tmp_path):
+    from repro.checkpoint.store import CheckpointStore
+
+    tel = Telemetry()
+    store = CheckpointStore(tmp_path / "ck", keep_last=1, telemetry=tel)
+    tree = {"w": np.ones((8, 8), np.float32)}
+    store.save(0, tree)
+    store.save_async(1, tree)
+    store.wait()
+    writes = [ev for ev in tel.events() if ev["name"] == "checkpoint.write"]
+    assert [w["args"]["step"] for w in writes] == [0, 1]
+    assert all(w["args"]["bytes"] == 8 * 8 * 4 for w in writes)
+    prunes = [ev for ev in tel.events() if ev["name"] == "checkpoint.prune"]
+    assert len(prunes) == 1 and prunes[0]["args"]["steps"] == [0]
+    snap = tel.registry.snapshot()
+    assert snap["counters"]["checkpoint.saves"] == 2
+    assert snap["histograms"]["checkpoint.write_us"]["count"] == 2
+
+
+def test_serving_latency_histogram_and_hot_swap_event():
+    from repro import serve
+    from repro.core import low_rank
+
+    d, m, rank = 32, 24, 4
+    tel = Telemetry()
+    eng = serve.ServingEngine(
+        d, m, serve.ServeConfig(max_batch=8, rank_block=4,
+                                verify_kernels=False, telemetry=tel))
+    key = jax.random.PRNGKey(0)
+    it = low_rank.FactoredIterate(
+        u=jax.random.normal(key, (rank, d)),
+        s=jnp.ones((rank,)),
+        v=jax.random.normal(key, (rank, m)),
+        alpha=jnp.asarray(1.0),
+        count=jnp.asarray(rank, jnp.int32),
+    )
+    eng.load(it)
+    for _ in range(3):
+        eng.score(np.ones((8, d), np.float32))
+    eng.load(it._replace(s=it.s * 0.5))  # hot swap
+
+    hist = tel.registry.snapshot()["histograms"]["serve.latency_us"]
+    assert hist["count"] == 3
+    names = [ev["name"] for ev in tel.events()]
+    assert names.count("serve.dispatch") == 3
+    assert "serve.compile" in names and "serve.hot_swap" in names
+    assert eng.stats["dispatches"] == 3 and eng.stats["loads"] == 2
+    # registry and stats views agree — stats is the registry now
+    assert tel.registry.snapshot()["counters"]["serve.dispatches"] == 3
+
+
+def test_disabled_engines_do_not_share_counters():
+    """Two telemetry-off engines must not alias each other's stats through
+    the shared no-op singleton's registry."""
+    from repro import serve
+
+    a = serve.ServingEngine(16, 12, serve.ServeConfig(max_batch=4,
+                                                      verify_kernels=False))
+    b = serve.ServingEngine(16, 12, serve.ServeConfig(max_batch=4,
+                                                      verify_kernels=False))
+    a._counters["dispatches"].inc()
+    assert b.stats["dispatches"] == 0
+    assert Telemetry.noop().registry.snapshot()["counters"] == {}
