@@ -20,6 +20,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (
+        block_fw_convergence,
         comm_cost,
         dfw_scaling,
         engine_bench,
@@ -57,6 +58,10 @@ def main() -> None:
         "serving_latency": (
             lambda: serving_latency.run(ranks=(16, 128), dispatches=15))
         if args.fast else serving_latency.run,
+        # block_fw_convergence keeps Table-1 sizes even in --fast: the
+        # gated epochs_to_gap.speedup records ARE the d=m=1024 cells (the
+        # metric is an epoch-count ratio, immune to runner speed).
+        "block_fw_convergence": block_fw_convergence.run,
         "thm2_power_accuracy": power_accuracy.run,
         "kernels": kernel_bench.run,
         "roofline": roofline.run,

@@ -38,7 +38,7 @@ else:
     mesh = jax.make_mesh((NDEVN,), ("data",))
     ss = tasks.MTLSState(x=P("data"), y=P("data"), r=P("data"))
     isp = low_rank.FactoredIterate(u=P(), s=P(), v=P(), alpha=P(), count=P())
-    asp = frank_wolfe.EpochAux(P(), P(), P(), P())
+    asp = frank_wolfe.EpochAux(P(), P(), P(), P(), P())
     csp = frank_wolfe.EpochCarry(state=ss, iterate=isp, comm_state=(),
                                  t=P(), key=P())
     step = frank_wolfe.make_epoch_step(task, 1.0, K, step_size="linesearch",

@@ -272,6 +272,35 @@ def verify_declared(verbose: bool = True) -> int:
     except Exception as e:  # noqa: BLE001 — every failure must be reported
         report(c, e, "")
 
+    # 1b. Block power method: K block iterations still cost exactly 2K
+    # all-reduce rounds — the (k,k) Gram orthogonalization runs on the
+    # replicated reduced block, adding zero rounds at any block width.
+    Kb, kb = 3, 4
+    c = power_method.block_collective_rounds_contract(Kb, kb)
+    try:
+        mesh = jax.make_mesh((8,), ("data",))
+
+        def run_block(a, v0):
+            return power_method.block_power_iterations(
+                lambda v: a @ v, lambda u: a.T @ u, v0, Kb, axis_name="data"
+            )
+
+        bspec = power_method.BlockPowerResult(
+            u=P(), v=P(), sigma=P(), probe=P(), iters=P()
+        )
+        wrapped = shard_map_compat(
+            run_block,
+            mesh,
+            in_specs=(P("data"), P()),
+            out_specs=(bspec, ()),
+        )
+        a = jax.ShapeDtypeStruct((n, m), jnp.float32)
+        v0 = jax.ShapeDtypeStruct((m, kb), jnp.float32)
+        c.check_hlo(wrapped, a, v0)
+        report(c, None, f"8-way, K={Kb}, k={kb}: all-reduce == {2 * Kb}")
+    except Exception as e:  # noqa: BLE001
+        report(c, e, "")
+
     # 2. Engine: a const:K run is one scan dispatch (+ final loss eval),
     # device-resident under the transfer guard.
     c = engine.dispatch_contract()
@@ -289,6 +318,27 @@ def verify_declared(verbose: bool = True) -> int:
             )
         c.check_stats(res.stats)
         report(c, None, f"30-epoch const:2 stats {res.stats}")
+    except Exception as e:  # noqa: BLE001
+        report(c, e, "")
+
+    # 2b. Engine dispatch pins hold with the block solver enabled: same
+    # segment plan, same dispatch/sync/transfer budget — the block tier
+    # changes the per-epoch math, never the execution discipline.
+    c = engine.dispatch_contract(name="engine.dispatch[solver=block:4:adapt]")
+    try:
+        key = jax.random.PRNGKey(0)
+        kx, kw = jax.random.split(key)
+        w = jax.random.normal(kw, (24, 18))
+        x = jax.random.normal(kx, (400, 24))
+        task = tasks.MultiTaskLeastSquares(d=24, m=18)
+        state = task.init_state(x, x @ w)
+        with c.guard():
+            res = frank_wolfe.fit(
+                task, state, mu=1.0, num_epochs=30, key=jax.random.PRNGKey(1),
+                step_size="linesearch", solver="block:4:adapt",
+            )
+        c.check_stats(res.stats)
+        report(c, None, f"30-epoch const:2 block:4:adapt stats {res.stats}")
     except Exception as e:  # noqa: BLE001
         report(c, e, "")
 

@@ -20,7 +20,7 @@ DFW-Trace run and implements the two resume contracts the drivers expose:
 Payload schema (one checkpoint step = one segment boundary, step id = t)::
 
     {
-      "carry":   EpochCarry(state, iterate_packed, comm_state, t, key),
+      "carry":   EpochCarry(state, iterate_packed, comm_state, t, key[, probe]),
       "history": {"loss","gap","sigma","gamma","k"} arrays of length t,
       "masks":   (num_epochs, nw) straggler weights, or (0, 0) when unused,
     }
@@ -42,12 +42,17 @@ from typing import Any, Dict, Optional, Union
 import numpy as np
 
 from ..core import low_rank
-from ..core.frank_wolfe import EpochCarry
+from ..core.frank_wolfe import EpochCarry, parse_solver
 from .store import CheckpointStore
 
 PyTree = Any
 
-PAYLOAD_FORMAT = 1
+# v2 appends the block solver's warm-start probe leaf to the carry (format 1
+# carries no probe — EpochCarry.probe defaults to the zero-leaf ``()``, so
+# v1 payloads restore leaf-for-leaf into the current treedef with a cold
+# probe). Writers stamp PAYLOAD_FORMAT; readers accept READABLE_FORMATS.
+PAYLOAD_FORMAT = 2
+READABLE_FORMATS = (1, 2)
 HISTORY_KEYS = ("loss", "gap", "sigma", "gamma", "k")
 
 # Manifest-extra fields restore_run hard-indexes to rebuild structure
@@ -199,11 +204,15 @@ class RunSnapshot:
         return low_rank.unpack_live(self.carry.iterate, max_rank)
 
 
-def _payload_like(state_like: PyTree, comm_state_like: PyTree) -> Dict:
+def _payload_like(
+    state_like: PyTree, comm_state_like: PyTree, probe_like: PyTree = ()
+) -> Dict:
     """Structure skeleton matching ``RunCheckpointer.save_segment``'s
     payload. Leaf *values* are ignored by restore; only the treedef counts
     (the carry holds namedtuple nodes, which the store cannot re-serialize
-    on its own — see ``CheckpointStore.restore``)."""
+    on its own — see ``CheckpointStore.restore``). ``probe_like`` is a
+    dummy leaf when the checkpoint carries a block-solver probe (format 2
+    block runs), ``()`` otherwise — format-1 payloads have no probe leaf."""
     z = np.zeros((0,), np.float32)
     return {
         "carry": EpochCarry(
@@ -212,6 +221,7 @@ def _payload_like(state_like: PyTree, comm_state_like: PyTree) -> Dict:
             comm_state=comm_state_like,
             t=z,
             key=z,
+            probe=probe_like,
         ),
         "history": {k: z for k in HISTORY_KEYS},
         "masks": z,
@@ -257,10 +267,10 @@ def read_iterate_packed(
         store = CheckpointStore(store)
     step, extra = read_run_extra(store, step)
     fmt = extra.get("payload_format", -1)
-    if fmt != PAYLOAD_FORMAT:
+    if fmt not in READABLE_FORMATS:
         raise ValueError(
             f"checkpoint step {step} has payload format {fmt}; this build "
-            f"reads {PAYLOAD_FORMAT}"
+            f"reads {READABLE_FORMATS}"
         )
     import json
 
@@ -301,18 +311,30 @@ def restore_run(
         store = CheckpointStore(store)
     step, extra = read_run_extra(store, step)
     fmt = extra.get("payload_format", -1)
-    if fmt != PAYLOAD_FORMAT:
+    if fmt not in READABLE_FORMATS:
         raise ValueError(
             f"checkpoint step {step} has payload format {fmt}; this build "
-            f"reads {PAYLOAD_FORMAT}"
+            f"reads {READABLE_FORMATS}"
         )
     from ..comm import make_reducer
 
     reducer = make_reducer(
         extra["comm"], num_workers=max(1, int(extra["num_workers"]))
     )
-    comm_like = reducer.state_spec(int(extra["d"]), int(extra["m"]))
-    like = _payload_like(state_like, comm_like)
+    # The block solver flattens (d,k)/(m,k) payloads through the reducer, so
+    # stateful encodings saved their state at the flattened sizes; v1
+    # checkpoints predate the solver field and are always rank1 (k=1).
+    sspec = parse_solver(extra.get("solver", "rank1"))
+    k_blk = sspec.k if sspec.kind == "block" else 1
+    comm_like = reducer.state_spec(
+        int(extra["d"]) * k_blk, int(extra["m"]) * k_blk
+    )
+    probe_like = (
+        np.zeros((0,), np.float32)
+        if fmt >= 2 and sspec.kind == "block"
+        else ()
+    )
+    like = _payload_like(state_like, comm_like, probe_like)
     step, payload, extra = store.restore(step, like=like)
 
     carry = payload["carry"]

@@ -59,7 +59,10 @@ def make_naive_epoch_step(
 
         state = task.update(state, u, v, gamma, mu)
         it = low_rank.fw_update(it, u, v, gamma, mu)
-        return state, it, EpochAux(loss=loss, gap=gap, sigma=sigma, gamma=gamma)
+        return state, it, EpochAux(
+            loss=loss, gap=gap, sigma=sigma, gamma=gamma,
+            piters=jnp.zeros((), jnp.float32),
+        )
 
     return epoch
 
@@ -106,6 +109,9 @@ def make_sva_epoch_step(
 
         state = task.update(state, u, v, gamma, mu)
         it = low_rank.fw_update(it, u, v, gamma, mu)
-        return state, it, EpochAux(loss=loss, gap=gap, sigma=sigma, gamma=gamma)
+        return state, it, EpochAux(
+            loss=loss, gap=gap, sigma=sigma, gamma=gamma,
+            piters=jnp.zeros((), jnp.float32),
+        )
 
     return epoch

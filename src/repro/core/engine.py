@@ -48,8 +48,10 @@ from .frank_wolfe import (
     EpochAux,
     EpochCarry,
     init_carry,
+    init_probe,
     k_schedule,
     make_epoch_step,
+    parse_solver,
 )
 from .power_method import AxisName
 
@@ -111,17 +113,22 @@ def plan_segments(
     return segments
 
 
-def resolve_max_rank(max_rank: Optional[int], num_epochs: int) -> int:
-    """Factored-iterate capacity. One factor is appended per epoch and
-    ``low_rank.fw_update`` clamps out-of-range writes silently, so
-    undersizing would corrupt the returned iterate — reject it up front.
-    (Shared by the serial and sharded drivers: one capacity contract.)"""
+def resolve_max_rank(
+    max_rank: Optional[int], num_epochs: int, atoms_per_epoch: int = 1
+) -> int:
+    """Factored-iterate capacity. ``atoms_per_epoch`` factors are appended
+    per epoch (1 for rank1, k for ``block:k``) and ``low_rank.fw_update``
+    clamps out-of-range writes silently, so undersizing would corrupt the
+    returned iterate — reject it up front. (Shared by the serial and sharded
+    drivers: one capacity contract.)"""
+    need = num_epochs * atoms_per_epoch
     if max_rank is None:
-        return num_epochs
-    if max_rank < num_epochs:
+        return need
+    if max_rank < need:
         raise ValueError(
-            f"max_rank={max_rank} < num_epochs={num_epochs}: every "
-            "epoch appends one factor, so the iterate store would overflow"
+            f"max_rank={max_rank} < num_epochs*atoms={need}: every "
+            f"epoch appends {atoms_per_epoch} factor(s), so the iterate "
+            "store would overflow"
         )
     return max_rank
 
@@ -185,6 +192,7 @@ def _segment_step(
     reducer,
     gap_tol: Optional[float],
     has_masks: bool,
+    solver="rank1",
 ) -> Callable:
     """One segment as a pure function: ``length`` epochs under ``lax.scan``.
 
@@ -198,7 +206,8 @@ def _segment_step(
     NaN aux rows (truncated away by the host).
     """
     epoch = make_epoch_step(
-        task, mu, k, step_size=step_size, axis_name=axis_name, reducer=reducer
+        task, mu, k, step_size=step_size, axis_name=axis_name,
+        reducer=reducer, solver=solver,
     )
     tol = jnp.float32(-jnp.inf if gap_tol is None else gap_tol)
 
@@ -212,7 +221,9 @@ def _segment_step(
 
             def skip(c):
                 nan = jnp.float32(jnp.nan)
-                return c, EpochAux(loss=nan, gap=nan, sigma=nan, gamma=nan)
+                return c, EpochAux(
+                    loss=nan, gap=nan, sigma=nan, gamma=nan, piters=nan
+                )
 
             done = c[1]
             return jax.lax.cond(done, skip, live, c)
@@ -226,14 +237,20 @@ def _segment_step(
 
 
 def sharded_carry_spec(
-    axis_or_axes, state_spec: PyTree, comm_state_example: PyTree = ()
+    axis_or_axes,
+    state_spec: PyTree,
+    comm_state_example: PyTree = (),
+    probe_example: PyTree = (),
 ):
     """shard_map PartitionSpecs for an ``EpochCarry``: task state rows
     sharded over the data axes, iterate/counter/key replicated, and every
     reducer-state leaf carried with a *leading worker axis* sharded like the
-    data rows (dense's ``()`` has no leaves — encoding-agnostic).
+    data rows (dense's ``()`` has no leaves — encoding-agnostic). The block
+    solver's warm-start probe is replicated like the iterate (``()`` for
+    rank1 — zero extra leaves).
 
-    ``comm_state_example`` is one worker's (unstacked) reducer state."""
+    ``comm_state_example`` is one worker's (unstacked) reducer state;
+    ``probe_example`` the replicated probe block (or ``()``)."""
     from jax.sharding import PartitionSpec as P
 
     ax = axis_or_axes
@@ -243,6 +260,7 @@ def sharded_carry_spec(
         comm_state=jax.tree.map(lambda _: P(ax), comm_state_example),
         t=P(),
         key=P(),
+        probe=jax.tree.map(lambda _: P(), probe_example),
     )
 
 
@@ -266,18 +284,21 @@ def shard_map_segment_wrapper(
     state_spec: PyTree,
     *,
     comm_state_example: PyTree = (),
+    probe_example: PyTree = (),
     has_masks: bool = False,
 ) -> Callable[[Callable], Callable]:
     """Build the canonical ``segment_wrapper``: shard_map with the task
-    state row-sharded, iterate/scalars/key replicated, straggler masks
+    state row-sharded, iterate/scalars/key/probe replicated, straggler masks
     column-sharded, and reducer state carried with a leading worker axis
     (sharded like the data rows) that is stripped inside the region.
     """
     from jax.sharding import PartitionSpec as P
 
     ax = axis_or_axes
-    carry_spec = sharded_carry_spec(ax, state_spec, comm_state_example)
-    aux_spec = EpochAux(P(), P(), P(), P())
+    carry_spec = sharded_carry_spec(
+        ax, state_spec, comm_state_example, probe_example
+    )
+    aux_spec = EpochAux(P(), P(), P(), P(), P())
 
     def wrap(seg_fn):
         def step(carry, done, epochs_run, *masks):
@@ -341,6 +362,8 @@ def run_epochs(
     checkpointer=None,
     telemetry: Optional[Telemetry] = None,
     num_workers: int = 1,
+    solver="rank1",
+    probe: Optional[PyTree] = None,
 ) -> EngineResult:
     """Run up to ``num_epochs`` DFW-Trace epochs, device-resident.
 
@@ -400,16 +423,31 @@ def run_epochs(
                     f"initial_history[{name!r}] has {len(vals)} entries for "
                     f"start_t={start_t}; pass the restored prefix unmodified"
                 )
+    sspec = parse_solver(solver)
+    if sspec.kind == "block" and sspec.k > min(task.d, task.m):
+        raise ValueError(
+            f"solver block:{sspec.k}: block width exceeds "
+            f"min(d={task.d}, m={task.m})"
+        )
+    k_block = sspec.k if sspec.kind == "block" else 1
     if reducer is None:
         from ..comm.base import DenseReducer
 
         reducer = DenseReducer()
     if comm_state is None:
-        comm_state = reducer.init_state(task.d, task.m)
+        # Block mode flattens (d,k)/(m,k) blocks through the reducer, so
+        # stateful encodings (topk residuals) must be sized for the
+        # flattened payload.
+        comm_state = reducer.init_state(task.d * k_block, task.m * k_block)
     if iterate is None:
         iterate = low_rank.init(
-            resolve_max_rank(max_rank, num_epochs), task.d, task.m
+            resolve_max_rank(max_rank, num_epochs, k_block), task.d, task.m
         )
+    if sspec.kind == "block":
+        if probe is None:
+            probe = init_probe(sspec, task.m)
+    else:
+        probe = () if probe is None else probe
     if masks is not None:
         if masks.shape[0] != num_epochs:
             raise ValueError(
@@ -449,7 +487,7 @@ def run_epochs(
             fn = _segment_step(
                 task, mu, seg.k, seg.length,
                 step_size=step_size, axis_name=axis_name, reducer=reducer,
-                gap_tol=gap_tol, has_masks=has_masks,
+                gap_tol=gap_tol, has_masks=has_masks, solver=sspec,
             )
             jitted = jax.jit(wrapper(fn))
             if tel.wants_hlo:
@@ -488,19 +526,21 @@ def run_epochs(
 
     # Analytic per-segment comm cost: 2*K rounds per epoch (K psums of
     # d-vectors + K of m-vectors), wire bytes from the reducer's own
-    # accounting, logical bytes at the dense-f32 convention.
+    # accounting, logical bytes at the dense-f32 convention. The block
+    # solver keeps the round count and widens each payload by k (flattened
+    # (d,k)/(m,k) blocks through the same reducer).
     def _comm_cost(seg: Segment) -> Dict[str, float]:
         rounds = 2 * seg.k * seg.length
-        logical = 8.0 * (task.d + task.m) * seg.k * seg.length
+        logical = 8.0 * (task.d + task.m) * k_block * seg.k * seg.length
         wire = float(
             seg.k * seg.length * (
-                reducer.wire_bytes(task.d, num_workers)
-                + reducer.wire_bytes(task.m, num_workers)
+                reducer.wire_bytes(task.d * k_block, num_workers)
+                + reducer.wire_bytes(task.m * k_block, num_workers)
             )
         )
         return {"rounds": rounds, "logical_bytes": logical, "wire_bytes": wire}
 
-    carry = init_carry(state, iterate, key, comm_state, t=start_t)
+    carry = init_carry(state, iterate, key, comm_state, t=start_t, probe=probe)
     done = jnp.zeros((), jnp.bool_)
     nrun = jnp.full((), start_t, jnp.int32)
     history: Dict[str, list] = {
@@ -614,6 +654,8 @@ def run_epochs(
         reg.counter("comm.rounds").inc(cost["rounds"])
         reg.counter("comm.logical_bytes").inc(cost["logical_bytes"])
         reg.counter("comm.wire_bytes").inc(cost["wire_bytes"])
+        if sspec.kind == "block":
+            reg.gauge("dfw.block.k").set(k_block)
         for j in range(seg.length):
             vals = [float(col[j]) for col in host_aux]
             if math.isnan(vals[0]):  # lax.cond no-op filler past early stop
@@ -622,6 +664,13 @@ def run_epochs(
             for name, val in zip(_HISTORY_KEYS, vals):
                 tel.counter_sample(f"dfw.{name}", val, ts_us=ts)
                 reg.gauge(f"dfw.{name}").set(val)
+            if sspec.kind == "block":
+                # Executed block power iterations (host aux's piters column
+                # — rides the fetch the engine already performs, zero added
+                # syncs; < K per epoch when the adaptive stop fired).
+                reg.counter("dfw.block.power_iters").inc(
+                    float(host_aux.piters[j])
+                )
             reg.counter("engine.epochs").inc()
 
     for i, seg in enumerate(segments):

@@ -31,7 +31,13 @@ import jax
 import jax.numpy as jnp
 
 from . import low_rank
-from .power_method import AxisName, power_iterations, sphere_vector
+from .power_method import (
+    AxisName,
+    block_power_iterations,
+    orthonormalize_block,
+    power_iterations,
+    sphere_vector,
+)
 from .trace_norm import duality_gap
 
 # Scalar psums (loss, <W,grad>, line-search terms) stay *exact* by design —
@@ -47,6 +53,7 @@ class EpochAux(NamedTuple):
     gap: jax.Array  # duality-gap estimate at W^t
     sigma: jax.Array  # power-method top-singular-value estimate
     gamma: jax.Array  # step size actually taken
+    piters: jax.Array  # power iterations actually executed (float32 scalar)
 
 
 class EpochCarry(NamedTuple):
@@ -59,6 +66,11 @@ class EpochCarry(NamedTuple):
     (int32, so it can live inside ``lax.scan``); ``key`` is the replicated
     run PRNG key — each epoch folds ``t`` in, never splits it, so the carry
     key is constant across epochs (the paper's shared-seed trick).
+    ``probe`` is the block solver's warm-start carry — the previous epoch's
+    converged (m, k) right singular block, replicated, handed to the next
+    epoch's block power iteration at zero communication cost. For the rank1
+    solver it is the empty pytree ``()``, so rank1 carries (and their v1
+    checkpoints, which restore leaves by order) keep their exact leaf layout.
     """
 
     state: PyTree  # task sufficient-information state (per-worker shard)
@@ -66,6 +78,7 @@ class EpochCarry(NamedTuple):
     comm_state: PyTree  # reducer per-worker state; () when dense
     t: jax.Array  # () int32 epoch counter
     key: jax.Array  # replicated PRNG key
+    probe: PyTree = ()  # block-solver warm-start (m, k) block; () for rank1
 
 
 def init_carry(
@@ -74,13 +87,114 @@ def init_carry(
     key: jax.Array,
     comm_state: PyTree = (),
     t: int = 0,
+    probe: PyTree = (),
 ) -> EpochCarry:
     """Carry at epoch ``t`` (0 for a fresh run; a checkpoint's saved epoch
     counter when resuming), comm state defaulting to dense's ()."""
     return EpochCarry(
         state=state, iterate=iterate, comm_state=comm_state,
-        t=jnp.full((), t, jnp.int32), key=key,
+        t=jnp.full((), t, jnp.int32), key=key, probe=probe,
     )
+
+
+# ---------------------------------------------------------------------------
+# Solver tiers
+# ---------------------------------------------------------------------------
+
+#: Relative tolerance for the spectral-gap-adaptive block power iteration:
+#: once no estimated singular value moved by more than ADAPT_RTOL relative to
+#: the gap certificate's scale, further iterations cannot change the FW step
+#: materially and the remaining K budget is skipped on device.
+ADAPT_RTOL = 0.05
+
+
+class SolverSpec(NamedTuple):
+    """Parsed LMO solver tier (see ``parse_solver``)."""
+
+    kind: str  # "rank1" | "block"
+    k: int  # block width (1 for rank1)
+    adaptive: bool  # spectral-gap-adaptive K(t): stop iterating early
+    cold: bool  # ignore the carried warm-start probe (ablation knob)
+
+
+def parse_solver(spec) -> SolverSpec:
+    """Parse a solver spec string — THE single validation point shared by
+    ``frank_wolfe.fit``, ``launch.dfw.fit``/``fit_serial`` and ``DFWConfig``.
+
+    Grammar::
+
+        "rank1"                  paper's rank-1 LMO (Algorithm 2)
+        "block:K"                rank-K block LMO (BlockFW tier)
+        "block:K:adapt"          + spectral-gap-adaptive power iterations
+        "block:K:cold"           + ignore the warm-start probe (ablation)
+        "block:K:adapt:cold"     flags compose in any order
+
+    Raises ``ValueError`` on malformed specs — ``block:0``, ``block:-3``,
+    ``block:`` (no k), unknown flags, unknown solver names. An already-parsed
+    ``SolverSpec`` passes through unchanged.
+    """
+    if isinstance(spec, SolverSpec):
+        return spec
+    if not isinstance(spec, str):
+        raise ValueError(f"solver spec must be a string, got {type(spec).__name__}")
+    if spec == "rank1":
+        return SolverSpec(kind="rank1", k=1, adaptive=False, cold=False)
+    if spec == "block" or spec.startswith("block:"):
+        parts = spec.split(":")
+        if len(parts) < 2 or parts[1] == "":
+            raise ValueError(
+                f"solver {spec!r}: block solver needs a width, e.g. 'block:4'"
+            )
+        try:
+            k = int(parts[1])
+        except ValueError:
+            raise ValueError(
+                f"solver {spec!r}: block width {parts[1]!r} is not an integer"
+            ) from None
+        if k < 1:
+            raise ValueError(
+                f"solver {spec!r}: block width must be >= 1, got {k}"
+            )
+        adaptive = cold = False
+        for flag in parts[2:]:
+            if flag == "adapt":
+                adaptive = True
+            elif flag == "cold":
+                cold = True
+            else:
+                raise ValueError(
+                    f"solver {spec!r}: unknown flag {flag!r} "
+                    "(expected 'adapt' and/or 'cold')"
+                )
+        return SolverSpec(kind="block", k=k, adaptive=adaptive, cold=cold)
+    raise ValueError(
+        f"unknown solver {spec!r} (expected 'rank1' or 'block:K[:adapt][:cold]')"
+    )
+
+
+def solver_probe_shape(spec, m: int) -> Optional[tuple]:
+    """Shape of the warm-start probe leaf carried in ``EpochCarry.probe`` for
+    this solver, or ``None`` when the solver carries no probe (rank1)."""
+    s = parse_solver(spec)
+    return (m, s.k) if s.kind == "block" else None
+
+
+def init_probe(spec, m: int, key: Optional[jax.Array] = None) -> PyTree:
+    """Cold-start probe for a fresh run: a deterministic orthonormal (m, k)
+    block for the block solver (built from ``key`` when given, else from a
+    fixed seed so every worker agrees without communication), ``()`` for
+    rank1."""
+    shape = solver_probe_shape(spec, m)
+    if shape is None:
+        return ()
+    k = shape[1]
+    if key is None:
+        key = jax.random.PRNGKey(0x5EED)
+    cols = jnp.stack(
+        [sphere_vector(jax.random.fold_in(key, 101 + j), m) for j in range(k)],
+        axis=1,
+    )
+    return orthonormalize_block(cols)
 
 
 # ---------------------------------------------------------------------------
@@ -136,6 +250,7 @@ def make_epoch_step(
     step_size: str = "default",
     axis_name: AxisName = None,
     reducer=None,
+    solver="rank1",
 ) -> Callable:
     """Returns ``epoch(carry, worker_weight=None) -> (carry, aux)``.
 
@@ -151,6 +266,13 @@ def make_epoch_step(
     — loss, <W, grad>, the line-search numerator/denominator — always stay
     exact: they are O(1) on the wire, and corrupting them would bias the step
     size and the duality-gap certificate rather than just the LMO direction.
+
+    ``solver`` selects the LMO tier (see ``parse_solver``): ``"rank1"`` is
+    the paper's single-atom power method; ``"block:K[:adapt][:cold]"`` is
+    the BlockFW tier — a rank-K block power iteration whose k atoms are
+    blended into one feasible direction and appended together, with the
+    converged right block carried in ``EpochCarry.probe`` as next epoch's
+    warm start.
     """
     if step_size not in ("default", "linesearch"):
         raise ValueError(step_size)
@@ -161,6 +283,7 @@ def make_epoch_step(
             f"num_power_iters={num_power_iters}: at least one power iteration "
             "is required (K=0 would feed a zero singular direction to the LMO)"
         )
+    sspec = parse_solver(solver)
     if reducer is None:
         from ..comm.base import DenseReducer  # leaf import; no cycle
 
@@ -174,8 +297,73 @@ def make_epoch_step(
         # shared-seed trick: zero communication). The reducer key is a
         # distinct stream from v0's: fold the epoch index, then a tag.
         ekey = jax.random.fold_in(carry.key, ti)
-        v0 = sphere_vector(ekey, task.m)
         ckey = jax.random.fold_in(ekey, 0xC033)
+        w = 1.0 if worker_weight is None else worker_weight
+        loss = _psum(w * task.local_loss(state), axis_name)
+        inner = _psum(w * task.inner_w_grad(state), axis_name)
+
+        if sspec.kind == "block":
+            k = sspec.k
+            # Fresh random columns every epoch; the carried probe (when warm)
+            # replaces them entirely. Mixing a small random component back in
+            # would also work but breaks block:1 == rank1 equivalence.
+            rand0 = jnp.stack(
+                [sphere_vector(jax.random.fold_in(ekey, 101 + j), task.m)
+                 for j in range(k)],
+                axis=1,
+            )
+            if sspec.cold or not isinstance(carry.probe, jax.Array):
+                v0 = rand0
+            else:
+                # Warm start from last epoch's converged right block; any
+                # numerically dead column (all-zero from init skeletons)
+                # falls back to its random column.
+                col_norm = jnp.linalg.norm(carry.probe, axis=0, keepdims=True)
+                v0 = jnp.where(col_norm > 1e-6, carry.probe, rand0)
+            res, comm_state = block_power_iterations(
+                partial(task.matvec, state),
+                partial(task.rmatvec, state),
+                v0,
+                num_power_iters,
+                axis_name=axis_name,
+                worker_weight=worker_weight,
+                reducer=reducer,
+                comm_state=carry.comm_state,
+                key=ckey,
+                adapt_rtol=ADAPT_RTOL if sspec.adaptive else None,
+                # Scale for "did refinement stop mattering": the gap
+                # certificate is inner + mu*sigma_max, so changes small
+                # relative to |inner|/mu (or sigma itself) can't move it.
+                adapt_ref=jnp.abs(inner) / mu,
+            )
+            sigma_max = jnp.max(res.sigma)
+            gap = duality_gap(inner, sigma_max, mu)
+            # Blend the k atoms into one feasible direction
+            # S = -mu sum_j c_j u_j v_j^T with c = sigma / sum(sigma):
+            # the trace-ball-normalized top-k projection of -grad
+            # (sum c = 1 keeps ||S||_* <= mu). Fold c into u's columns so
+            # tasks see the same (u, v) signature as rank1.
+            c = res.sigma / (jnp.sum(res.sigma) + 1e-30)
+            u_c = res.u * c[None, :]
+            if step_size == "linesearch":
+                numer, denom = task.linesearch_terms(state, u_c, res.v, mu)
+                numer = _psum(w * numer, axis_name)
+                denom = _psum(w * denom, axis_name)
+                gamma = jnp.clip(numer / jnp.maximum(denom, 1e-30), 0.0, 1.0)
+            else:
+                gamma = 2.0 / (t + 2.0)
+            state = task.update(state, u_c, res.v, gamma, mu)
+            it = low_rank.fw_update_block(it, res.u, res.v, c, gamma, mu)
+            aux = EpochAux(
+                loss=loss, gap=gap, sigma=sigma_max, gamma=gamma,
+                piters=res.iters.astype(jnp.float32),
+            )
+            return EpochCarry(
+                state=state, iterate=it, comm_state=comm_state,
+                t=ti + 1, key=carry.key, probe=res.probe,
+            ), aux
+
+        v0 = sphere_vector(ekey, task.m)
         res, comm_state = power_iterations(
             partial(task.matvec, state),
             partial(task.rmatvec, state),
@@ -188,9 +376,6 @@ def make_epoch_step(
             key=ckey,
         )
 
-        w = 1.0 if worker_weight is None else worker_weight
-        loss = _psum(w * task.local_loss(state), axis_name)
-        inner = _psum(w * task.inner_w_grad(state), axis_name)
         gap = duality_gap(inner, res.sigma, mu)
 
         if step_size == "linesearch":
@@ -203,10 +388,13 @@ def make_epoch_step(
 
         state = task.update(state, res.u, res.v, gamma, mu)
         it = low_rank.fw_update(it, res.u, res.v, gamma, mu)
-        aux = EpochAux(loss=loss, gap=gap, sigma=res.sigma, gamma=gamma)
+        aux = EpochAux(
+            loss=loss, gap=gap, sigma=res.sigma, gamma=gamma,
+            piters=jnp.full((), num_power_iters, jnp.float32),
+        )
         return EpochCarry(
             state=state, iterate=it, comm_state=comm_state,
-            t=ti + 1, key=carry.key,
+            t=ti + 1, key=carry.key, probe=carry.probe,
         ), aux
 
     return epoch
@@ -258,6 +446,8 @@ def fit(
     checkpointer=None,
     telemetry=None,
     num_workers: int = 1,
+    solver: str = "rank1",
+    probe: PyTree = None,
 ) -> FitResult:
     """Run DFW-TRACE for up to ``num_epochs`` on the device-resident engine.
 
@@ -318,6 +508,11 @@ def fit(
     engine for its zero-sync span/metric stream and brackets the final-loss
     eval here; ``num_workers`` only scales the analytic comm byte
     accounting — it never changes the math.
+
+    ``solver`` selects the LMO tier (``parse_solver`` grammar). For the
+    block tier, ``probe`` optionally resumes the warm-start block from a
+    checkpoint (``None`` cold-starts deterministically); an epoch appends
+    k factors, so ``max_rank`` defaults to ``num_epochs * k``.
     """
     from .engine import run_epochs  # local import: engine builds on this module
     from ..obs import Telemetry
@@ -346,6 +541,8 @@ def fit(
         checkpointer=checkpointer,
         telemetry=tel,
         num_workers=num_workers,
+        solver=solver,
+        probe=probe,
     )
     if checkpointer is not None:
         # Join the last async write so its failure surfaces with the run,

@@ -62,6 +62,40 @@ def fw_update(
     )
 
 
+def fw_update_block(
+    it: FactoredIterate,
+    u: jax.Array,
+    v: jax.Array,
+    c: jax.Array,
+    gamma: jax.Array,
+    mu: float,
+) -> FactoredIterate:
+    """Rank-k FW step: ``W <- (1-gamma) W + gamma S`` with the blended block
+    atom ``S = -mu sum_j c_j u_j v_j^T``, appending k factors at once.
+
+    ``u`` (d, k) / ``v`` (m, k) hold unit atom columns, ``c`` (k,) the
+    nonnegative blend weights with ``sum c <= 1`` — the triangle inequality
+    then gives ``||S||_* <= mu``, so the step stays inside the trace-norm
+    ball exactly like the rank-1 atom. Same alpha-folding and gamma=1
+    dead-iterate handling as ``fw_update``; the k new rows land at
+    ``count .. count+k-1`` of the live-rank prefix.
+    """
+    k = u.shape[1]
+    new_alpha = it.alpha * (1.0 - gamma)
+    dead = jnp.abs(new_alpha) < 1e-30
+    safe_alpha = jnp.where(dead, 1.0, new_alpha)
+    s_live = jnp.where(dead, jnp.zeros_like(it.s), it.s)
+    s_new = (-gamma * mu / safe_alpha) * c.astype(it.s.dtype)
+    n = it.count
+    return FactoredIterate(
+        u=jax.lax.dynamic_update_slice(it.u, u.T.astype(it.u.dtype), (n, 0)),
+        s=jax.lax.dynamic_update_slice(s_live, s_new, (n,)),
+        v=jax.lax.dynamic_update_slice(it.v, v.T.astype(it.v.dtype), (n, 0)),
+        alpha=safe_alpha,
+        count=n + k,
+    )
+
+
 def materialize(it: FactoredIterate) -> jax.Array:
     """Dense W — O(dm) memory; for tests/small problems only."""
     return it.alpha * jnp.einsum("k,kd,km->dm", it.s, it.u, it.v)

@@ -34,6 +34,22 @@ class PowerResult(NamedTuple):
     sigma: jax.Array  # ()  top singular value estimate (= ||A^T u|| >= 0)
 
 
+class BlockPowerResult(NamedTuple):
+    """Top-k singular block estimate after K block power iterations.
+
+    ``u``/``v`` columns pair up as rank-1 atoms (``u_j^T A v_j = sigma_j``;
+    the v columns are unit but not mutually orthogonal mid-convergence);
+    ``probe`` is the *orthonormalized* right block — the thing to warm-start
+    the next epoch's iteration from. ``iters`` counts the iterations that
+    actually executed (< K when the adaptive stop fired early)."""
+
+    u: jax.Array  # (d, k) left block, orthonormal columns
+    v: jax.Array  # (m, k) right block, unit columns (atom directions)
+    sigma: jax.Array  # (k,) singular value estimates (unordered, >= 0)
+    probe: jax.Array  # (m, k) orthonormal right block (warm-start carry)
+    iters: jax.Array  # () int32 iterations executed
+
+
 def collective_rounds_contract(num_iters: int):
     """The paper's communication budget as a declared, checkable contract:
     K two-sided power iterations execute exactly 2K aggregation rounds
@@ -45,6 +61,21 @@ def collective_rounds_contract(num_iters: int):
 
     return Contract(
         name=f"power_method.collective_rounds[K={num_iters}]",
+        collective_counts={"all-reduce": 2.0 * num_iters},
+    )
+
+
+def block_collective_rounds_contract(num_iters: int, k: int):
+    """Block analogue of ``collective_rounds_contract``: K block iterations
+    still execute exactly 2K all-reduce rounds — the (k,k) Gram
+    orthogonalization runs on the *already-reduced replicated* block, so
+    widening the probe from a vector to k columns multiplies the payload of
+    each round by k but never adds a round. ``k`` is part of the name (and
+    of wire-byte accounting); the round count is k-free by construction."""
+    from ..analysis.contracts import Contract  # lazy: analysis is tooling
+
+    return Contract(
+        name=f"power_method.block_collective_rounds[K={num_iters},k={k}]",
         collective_counts={"all-reduce": 2.0 * num_iters},
     )
 
@@ -152,6 +183,154 @@ def power_iterations(
         0, num_iters, body, (u0, v0, sigma0, comm_state)
     )
     return PowerResult(u=u, v=v, sigma=sigma), comm_state
+
+
+def orthonormalize_block(b: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Orthonormalize the columns of ``b`` via Cholesky-QR on the (k,k) Gram.
+
+    The Gram ``G = B^T B`` is tiny (k x k) and — in this codebase's BSP
+    layout — computed on a block that is already replicated post-all-reduce,
+    so the orthogonalization costs zero communication rounds (in a
+    row-sharded layout it would cost one (k,k) all-reduce; see
+    docs/ALGORITHMS.md). The jitter keeps the factorization defined for
+    rank-deficient blocks; an all-zero block maps to an all-zero block.
+    """
+    k = b.shape[-1]
+    g = b.T @ b
+    jitter = eps * (jnp.trace(g) / k) + 1e-30
+    chol = jnp.linalg.cholesky(g + jitter * jnp.eye(k, dtype=b.dtype))
+    # B @ inv(L)^T via one triangular solve of the (k, n) system.
+    return jax.scipy.linalg.solve_triangular(chol, b.T, lower=True).T
+
+
+def block_power_step(
+    matmat: Callable[[jax.Array], jax.Array],
+    rmatmat: Callable[[jax.Array], jax.Array],
+    q: jax.Array,
+    *,
+    reduce: Callable[[jax.Array], jax.Array] = lambda x: x,
+) -> tuple:
+    """One warm-started half-pair of block power iteration: ``p =
+    orth(reduce(A q)); q' = reduce(A^T p)``. Returns ``(p, q')``.
+
+    This is the shared primitive between the FW block LMO below and
+    PowerSGD gradient compression (``optim/compression.py``): both do
+    exactly one aggregated-matmat -> Gram-orthonormalize -> aggregated-
+    rmatmat step per call, warm-starting ``q`` from the previous round.
+    ``reduce`` is the aggregation (psum for the LMO, pmean for PowerSGD's
+    averaged gradients; identity when serial)."""
+    p = orthonormalize_block(reduce(matmat(q)))
+    return p, reduce(rmatmat(p))
+
+
+def block_power_iterations(
+    matvec: Callable[[jax.Array], jax.Array],
+    rmatvec: Callable[[jax.Array], jax.Array],
+    v0: jax.Array,
+    num_iters: int,
+    *,
+    axis_name: AxisName = None,
+    worker_weight: Optional[jax.Array] = None,
+    reducer=None,
+    comm_state=None,
+    key: Optional[jax.Array] = None,
+    adapt_rtol: Optional[float] = None,
+    adapt_ref: Optional[jax.Array] = None,
+):
+    """Distributed *block* power iteration: ``(d,k)``/``(m,k)`` probe blocks
+    instead of vectors — the rank-k LMO engine of the ``block:k`` solver
+    tier (BlockFW, arXiv:1708.02105).
+
+    Per iteration: all-reduce the local block matvec (flattened through the
+    ``Reducer`` contract, so int8/topk encodings compose unchanged),
+    Cholesky-QR orthonormalize the replicated result against its (k,k)
+    Gram, all-reduce the block rmatvec, read per-column sigmas off it, and
+    orthonormalize again for the next round — exactly ``2 * num_iters``
+    collective rounds, the same count as ``power_iterations`` with k-times
+    wider payloads (``block_collective_rounds_contract``).
+
+    ``v0`` is the (m, k) starting block — a previous epoch's converged
+    probe for warm starts (it is re-orthonormalized here, so any
+    nonzero-column block is a valid start). ``adapt_rtol`` enables the
+    spectral-gap-adaptive stop: once the largest per-column sigma change of
+    an iteration falls below ``adapt_rtol * max(adapt_ref, max sigma)``,
+    the remaining iterations become ``lax.cond`` no-ops — the static HLO
+    round count stays 2K, the executed matvecs and collectives stop.
+    Callers pass ``adapt_ref`` as the scale on which the duality-gap
+    certificate lives (the FW epoch uses ``|<W, grad>| / mu``), so
+    iterations are spent only while they still move the certificate.
+
+    Always returns ``(BlockPowerResult, comm_state)`` (``reducer=None``
+    uses the exact dense psum with ``()`` state).
+    """
+    if num_iters < 1:
+        raise ValueError(
+            f"num_iters={num_iters}: block_power_iterations needs >= 1 "
+            "iteration (0 returns a zero block and corrupts the caller)"
+        )
+    if v0.ndim != 2:
+        raise ValueError(f"v0 must be (m, k), got shape {v0.shape}")
+    if reducer is None:
+        from ..comm.base import DenseReducer  # leaf import; no cycle
+
+        reducer = DenseReducer()
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    m, k = v0.shape
+    w = 1.0 if worker_weight is None else worker_weight
+    matmat = jax.vmap(matvec, in_axes=1, out_axes=1)
+    rmatmat = jax.vmap(rmatvec, in_axes=1, out_axes=1)
+    d = matmat(v0).shape[0]  # shapes only; dead under jit (loop recomputes)
+    if comm_state is None:
+        comm_state = reducer.init_state(d * k, m * k)
+
+    u0 = jnp.zeros((d, k), v0.dtype)
+    sigma0 = jnp.zeros((k,), jnp.float32)
+    va0 = v0 / (jnp.linalg.norm(v0, axis=0, keepdims=True) + _EPS)
+    init = (u0, orthonormalize_block(v0), va0, sigma0, comm_state,
+            jnp.zeros((), jnp.bool_), jnp.zeros((), jnp.int32))
+
+    def live(i, c):
+        _, v, _, sigma, cs, done, iters = c
+        ki = jax.random.fold_in(key, i)
+        uu, cs = reducer.reduce(
+            (w * matmat(v)).reshape(-1), cs, slot="u",
+            key=jax.random.fold_in(ki, 0), axis_name=axis_name,
+            weight=worker_weight,
+        )
+        ub = orthonormalize_block(uu.reshape(d, k))
+        vv, cs = reducer.reduce(
+            (w * rmatmat(ub)).reshape(-1), cs, slot="v",
+            key=jax.random.fold_in(ki, 1), axis_name=axis_name,
+            weight=worker_weight,
+        )
+        vv = vv.reshape(m, k)
+        sig = jnp.linalg.norm(vv, axis=0)
+        v_atoms = vv / (sig[None, :] + _EPS)
+        if adapt_rtol is not None:
+            ref = jnp.max(sig)
+            if adapt_ref is not None:
+                ref = jnp.maximum(ref, adapt_ref)
+            done = done | (
+                jnp.max(jnp.abs(sig - sigma)) <= adapt_rtol * (ref + _EPS)
+            )
+        return (ub, orthonormalize_block(vv), v_atoms, sig, cs, done,
+                iters + 1)
+
+    def body(i, c):
+        # Once the adaptive criterion fires, remaining iterations are
+        # no-ops: the static collective count stays 2K (cond branches are
+        # counted once by analysis/hlo), the executed work stops.
+        return jax.lax.cond(c[5], lambda c: c, lambda c: live(i, c), c)
+
+    u, v_next, v_atoms, sigma, comm_state, _, iters = jax.lax.fori_loop(
+        0, num_iters, body, init
+    )
+    return (
+        BlockPowerResult(u=u, v=v_atoms, sigma=sigma, probe=v_next,
+                         iters=iters),
+        comm_state,
+    )
 
 
 def power_method_dense(

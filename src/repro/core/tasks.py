@@ -23,6 +23,29 @@ import jax
 import jax.numpy as jnp
 
 
+def _uvt(xu: jax.Array, v: jax.Array) -> jax.Array:
+    """The atom's action on the sample axis: ``outer(xu, v)`` for a rank-1
+    (vector) atom, ``xu @ v.T`` for a rank-k block whose u columns already
+    carry the blend weights (the ``block:k`` solver's ``S = -mu sum_j c_j
+    u_j v_j^T`` with ``c`` folded into ``u``). ndim is static, so the
+    rank-1 path stays byte-identical to the pre-block code."""
+    if xu.ndim == 1:
+        return jnp.outer(xu, v)
+    return xu @ v.T
+
+
+def _entrywise_uv(
+    u: jax.Array, v: jax.Array, rows: jax.Array, cols: jax.Array
+) -> jax.Array:
+    """(sum_j u[rows, j] * v[cols, j]) — the atom evaluated on a COO entry
+    shard; reduces to ``u[rows] * v[cols]`` for rank-1 vectors."""
+    if u.ndim == 1:
+        return jnp.take(u, rows) * jnp.take(v, cols)
+    return jnp.sum(
+        jnp.take(u, rows, axis=0) * jnp.take(v, cols, axis=0), axis=-1
+    )
+
+
 # ---------------------------------------------------------------------------
 # Multi-task least squares:  F(W) = 1/2 ||XW - Y||_F^2
 # ---------------------------------------------------------------------------
@@ -58,8 +81,9 @@ class MultiTaskLeastSquares:
 
     def update(self, s: MTLSState, u, v, gamma, mu) -> MTLSState:
         # R' = X[(1-g)W + g S] - Y = (1-g)R - g Y - g mu (X u) v^T
+        # (block atoms: u (d,k) with blend weights folded in, v (m,k))
         xu = s.x @ u
-        r = (1.0 - gamma) * s.r - gamma * s.y - (gamma * mu) * jnp.outer(xu, v)
+        r = (1.0 - gamma) * s.r - gamma * s.y - (gamma * mu) * _uvt(xu, v)
         return MTLSState(x=s.x, y=s.y, r=r)
 
     def local_loss(self, s: MTLSState) -> jax.Array:
@@ -79,7 +103,7 @@ class MultiTaskLeastSquares:
         computed via X D = -mu (X u) v^T - (R + Y)  — all O(n_j(d+m)).
         Returns local contributions; caller psums then divides.
         """
-        xd = -(mu) * jnp.outer(s.x @ u, v) - (s.r + s.y)
+        xd = -(mu) * _uvt(s.x @ u, v) - (s.r + s.y)
         numer = -jnp.sum(s.r * xd)
         denom = jnp.sum(xd * xd)
         return numer, denom
@@ -153,7 +177,7 @@ class MultinomialLogistic:
         return self._probs(s).T @ t - jnp.zeros((self.m,), t.dtype).at[s.y].add(t)
 
     def update(self, s: LogisticState, u, v, gamma, mu) -> LogisticState:
-        z = (1.0 - gamma) * s.z - (gamma * mu) * jnp.outer(s.x @ u, v)
+        z = (1.0 - gamma) * s.z - (gamma * mu) * _uvt(s.x @ u, v)
         return LogisticState(x=s.x, y=s.y, z=z)
 
     def local_loss(self, s: LogisticState) -> jax.Array:
@@ -252,7 +276,8 @@ class MatrixCompletion:
     def update(self, s: MCState, u, v, gamma, mu) -> MCState:
         # W' = (1-g)W - g mu u v^T on the observed entries:
         # resid' = (1-g) resid - g w M - g mu w u[rows] v[cols]
-        uv = s.weight * jnp.take(u, s.rows) * jnp.take(v, s.cols)
+        # (block atoms sum their k columns entrywise — see _entrywise_uv)
+        uv = s.weight * _entrywise_uv(u, v, s.rows, s.cols)
         resid = (1.0 - gamma) * s.resid - gamma * s.weight * s.vals - (gamma * mu) * uv
         return s._replace(resid=resid)
 
@@ -276,7 +301,7 @@ class MatrixCompletion:
         objective: gamma* = <-grad, D> / ||P_Omega(D)||^2 with D = S - W,
         restricted to the entry shard (all O(p_j))."""
         # w * D_ij = -mu w u_i v_j - w W_ij, with w W_ij = resid + w M_ij
-        dw = -(mu) * s.weight * jnp.take(u, s.rows) * jnp.take(v, s.cols) - (
+        dw = -(mu) * s.weight * _entrywise_uv(u, v, s.rows, s.cols) - (
             s.resid + s.weight * s.vals
         )
         numer = -jnp.sum(s.resid * dw)

@@ -77,6 +77,15 @@ class DFWConfig:
     by num_workers/num_alive so psum'd aggregates (loss, gap, line-search
     terms) remain estimates of the full-data quantities.
 
+    ``solver`` selects the LMO tier (``frank_wolfe.parse_solver`` grammar):
+    ``"rank1"`` is the paper's single-atom power method;
+    ``"block:K[:adapt][:cold]"`` the linear-convergence BlockFW tier — a
+    rank-K block power iteration appending K atoms per epoch, warm-started
+    from the previous epoch's converged right block (``:cold`` disables the
+    warm start for ablations, ``:adapt`` stops power iterations early once
+    they no longer move the gap certificate). ``max_rank`` then defaults to
+    ``num_epochs * K``.
+
     ``comm`` selects the collective encoding for the power method's vector
     exchanges (``repro.comm``): "dense" (exact f32 psum), "int8"
     (stochastic-rounding s8 psum, ~4x fewer wire bytes), or "topk:r" (top-r
@@ -136,6 +145,7 @@ class DFWConfig:
     num_epochs: int
     schedule: str = "const:2"  # K(t); see frank_wolfe.k_schedule
     step_size: str = "default"  # "default" (2/(t+2)) or "linesearch"
+    solver: str = "rank1"  # LMO tier; see frank_wolfe.parse_solver
     comm: str = "dense"  # power-method collective encoding; see repro.comm
     data_axis: str = "data"
     sample_prob: float = 1.0
@@ -440,15 +450,20 @@ def make_sharded_epoch(
     axis = cfg.data_axis
     if reducer is None:
         reducer = comm_lib.DenseReducer()
+    sspec = frank_wolfe.parse_solver(cfg.solver)
+    k_block = sspec.k if sspec.kind == "block" else 1
     ep = frank_wolfe.make_epoch_step(
         task, cfg.mu, num_power_iters, step_size=cfg.step_size, axis_name=axis,
-        reducer=reducer,
+        reducer=reducer, solver=sspec,
     )
 
     carry_spec = engine.sharded_carry_spec(
-        axis, row_specs(state_example, axis), reducer.init_state(task.d, task.m)
+        axis,
+        row_specs(state_example, axis),
+        reducer.init_state(task.d * k_block, task.m * k_block),
+        frank_wolfe.init_probe(sspec, task.m),
     )
-    aux_spec = EpochAux(P(), P(), P(), P())
+    aux_spec = EpochAux(P(), P(), P(), P(), P())
 
     def step(carry, mask):
         carry, aux = ep(engine.strip_worker_axis(carry), worker_weight=mask[0])
@@ -522,6 +537,7 @@ def _make_checkpointer(
             step_size=cfg.step_size,
             sample_prob=cfg.sample_prob,
             reweight=cfg.reweight,
+            solver=cfg.solver,
         ),
     )
 
@@ -565,12 +581,14 @@ def fit(
             "make them agree"
         )
     nw = mesh.shape[cfg.data_axis]
-    max_rank = engine.resolve_max_rank(cfg.max_rank, cfg.num_epochs)
+    sspec = frank_wolfe.parse_solver(cfg.solver)
+    k_block = sspec.k if sspec.kind == "block" else 1
+    max_rank = engine.resolve_max_rank(cfg.max_rank, cfg.num_epochs, k_block)
     tel = cfg.telemetry if cfg.telemetry is not None else Telemetry.noop()
     tel.event("run.start", "run", driver="launch.dfw.fit",
               task=type(task).__name__, d=int(task.d), m=int(task.m),
               num_workers=nw, comm=cfg.comm, schedule=cfg.schedule,
-              num_epochs=cfg.num_epochs)
+              num_epochs=cfg.num_epochs, solver=cfg.solver)
 
     # One reducer for every encoding — "dense" is the exact-psum reducer
     # whose per-worker state is (), keeping the carry structure uniform.
@@ -602,8 +620,10 @@ def fit(
     # Per-worker reducer state: every worker starts from the reducer's own
     # init_state values (not zeros — the contract allows nonzero
     # initialization), stacked along a leading worker axis sharded like the
-    # data rows. Dense's () has no leaves, so this is a no-op there.
-    comm_example = reducer.init_state(task.d, task.m)
+    # data rows. Dense's () has no leaves, so this is a no-op there. The
+    # block solver flattens (d,k)/(m,k) blocks through the reducer, so
+    # stateful encodings are sized for the flattened payload.
+    comm_example = reducer.init_state(task.d * k_block, task.m * k_block)
     comm_state = jax.tree.map(
         lambda leaf: jax.device_put(
             jnp.broadcast_to(leaf, (nw,) + leaf.shape),
@@ -611,6 +631,12 @@ def fit(
         ),
         comm_example,
     )
+
+    # Block-solver warm-start probe: replicated (m, k) block, cold-started
+    # deterministically (() for rank1 — zero extra carry leaves).
+    probe_blk = frank_wolfe.init_probe(sspec, task.m)
+    if sspec.kind == "block":
+        probe_blk = jax.device_put(probe_blk, NamedSharding(mesh, P()))
 
     sampling = cfg.sample_prob < 1.0
     if sampling:
@@ -636,6 +662,19 @@ def fit(
         it = snap.unpack_iterate(max_rank)
         key = jnp.asarray(snap.carry.key)
         start_t, initial_history = snap.t, snap.history
+        snap_probe = getattr(snap.carry, "probe", ())
+        if (
+            sspec.kind == "block"
+            and hasattr(snap_probe, "shape")
+            and tuple(snap_probe.shape) == (task.m, sspec.k)
+        ):
+            # v2 checkpoint with a matching block width: resume the warm
+            # start bit-exactly. v1 payloads (or a changed k) keep the cold
+            # probe initialized above — convergence is preserved, warmth
+            # is not.
+            probe_blk = jax.device_put(
+                jnp.asarray(snap_probe), NamedSharding(mesh, P())
+            )
         same_mesh = int(snap.extra.get("num_workers", -1)) == nw
         if same_mesh and snap.extra.get("comm") == reducer.spec:
             # Bit-exact path: per-worker reducer state (e.g. top-k
@@ -691,6 +730,7 @@ def fit(
         cfg.data_axis,
         row_specs(state, cfg.data_axis),
         comm_state_example=comm_example,
+        probe_example=probe_blk,
         has_masks=True,
     )
     with tel.profiler():
@@ -717,6 +757,8 @@ def fit(
             checkpointer=checkpointer,
             telemetry=tel,
             num_workers=nw,
+            solver=sspec,
+            probe=probe_blk if sspec.kind == "block" else None,
         )
     if checkpointer is not None:
         # Surface the last in-flight write's failure here, not silently at
@@ -782,8 +824,11 @@ def fit_serial(
         cfg.comm, num_workers=1,
         use_pallas=cfg.use_pallas, interpret=cfg.interpret,
     )
+    sspec = frank_wolfe.parse_solver(cfg.solver)
+    k_block = sspec.k if sspec.kind == "block" else 1
     state = ktask.init_state(jnp.asarray(x), jnp.asarray(y))
     iterate, comm_state, start_t, initial_history = None, None, 0, None
+    probe = None
     if cfg.resume_from is not None:
         snap = ckpt.restore_run(
             cfg.resume_from, state_like=state, step=cfg.resume_step
@@ -791,10 +836,19 @@ def fit_serial(
         _check_snapshot(snap, task, cfg)
         state = jax.tree.map(jnp.asarray, snap.carry.state)
         iterate = snap.unpack_iterate(
-            engine.resolve_max_rank(cfg.max_rank, cfg.num_epochs)
+            engine.resolve_max_rank(cfg.max_rank, cfg.num_epochs, k_block)
         )
         key = jnp.asarray(snap.carry.key)
         start_t, initial_history = snap.t, snap.history
+        snap_probe = getattr(snap.carry, "probe", ())
+        if (
+            sspec.kind == "block"
+            and hasattr(snap_probe, "shape")
+            and tuple(snap_probe.shape) == (task.m, sspec.k)
+        ):
+            # v2 payload with matching block width resumes the warm start;
+            # v1 (or a changed k) cold-starts via the engine default.
+            probe = jnp.asarray(snap_probe)
         if (
             int(snap.extra.get("num_workers", -1)) == 1
             and snap.extra.get("comm") == reducer.spec
@@ -836,6 +890,8 @@ def fit_serial(
         initial_history=initial_history,
         checkpointer=checkpointer,
         telemetry=cfg.telemetry,
+        solver=sspec,
+        probe=probe,
     )
     return DFWFitResult(
         iterate=res.iterate, state=res.state, history=res.history, masks=None,

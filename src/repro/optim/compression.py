@@ -16,6 +16,8 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core.power_method import block_power_step, orthonormalize_block
+
 PyTree = Any
 
 
@@ -49,9 +51,12 @@ def init(params: PyTree, *, rank: int = 4, min_size: int = 4096, key=None) -> Po
     )
 
 
-def _orthonormalize(p: jax.Array) -> jax.Array:
-    q, _ = jnp.linalg.qr(p)
-    return q
+# Orthonormalization is the shared Cholesky-QR primitive from the FW block
+# power method (core/power_method.py). The PowerSGD approximation
+# P P^T G = P Q'^T is a projection onto span(P) — basis-invariant — so
+# swapping QR for Cholesky-QR leaves the compressed gradient (and the error
+# feedback) mathematically unchanged.
+_orthonormalize = orthonormalize_block
 
 
 def compress_and_sync(
@@ -64,6 +69,11 @@ def compress_and_sync(
     """Replace each large-2D grad with its rank-r sync'd approximation.
 
     Small leaves are psum-averaged exactly. Returns (synced_grads, new_state).
+
+    Each compressed leaf runs exactly one warm-started half-pair of block
+    power iteration — ``power_method.block_power_step``, the same primitive
+    the ``block:k`` FW solver iterates — with ``reduce`` = pmean (PowerSGD
+    averages gradients where the LMO psums them).
     """
 
     def psum_mean(x):
@@ -75,9 +85,11 @@ def compress_and_sync(
         if q is None:
             return psum_mean(g), None, None
         g2 = _as2d(g).astype(jnp.float32) + e  # error feedback
-        p = psum_mean(g2 @ q)  # (d, r): the only wire traffic ...
-        p = _orthonormalize(p)
-        q_new = psum_mean(g2.T @ p)  # (m, r): ... plus this
+        # One block power step: p = orth(pmean(G q)); q' = pmean(G^T p).
+        # The two reduced (d,r)/(m,r) blocks are the only wire traffic.
+        p, q_new = block_power_step(
+            lambda qq: g2 @ qq, lambda pp: g2.T @ pp, q, reduce=psum_mean
+        )
         approx = p @ q_new.T
         e_new = g2 - approx
         return approx.reshape(g.shape).astype(g.dtype), q_new, e_new

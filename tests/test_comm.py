@@ -313,11 +313,12 @@ def test_sharded_dense_reducer_bit_exact_vs_legacy_epoch():
             gamma = jnp.clip(numer / jnp.maximum(denom, 1e-30), 0.0, 1.0)
             state = task.update(state, res.u, res.v, gamma, 1.0)
             it = low_rank.fw_update(it, res.u, res.v, gamma, 1.0)
-            return state, it, frank_wolfe.EpochAux(loss, gap, res.sigma, gamma)
+            return state, it, frank_wolfe.EpochAux(
+                loss, gap, res.sigma, gamma, jnp.full((), 2, jnp.float32))
 
         ss = jax.tree.map(lambda _: P("data"), state)
         isp = low_rank.FactoredIterate(u=P(), s=P(), v=P(), alpha=P(), count=P())
-        asp = frank_wolfe.EpochAux(P(), P(), P(), P())
+        asp = frank_wolfe.EpochAux(P(), P(), P(), P(), P())
         wrapped = shard_map_compat(oracle, mesh,
             in_specs=(ss, isp, P(), P("data")), out_specs=(ss, isp, asp))
         s1, it1, aux1 = jax.jit(wrapped)(state, it, k, mask)

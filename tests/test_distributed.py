@@ -138,7 +138,7 @@ def test_straggler_dropout_still_converges():
         mesh = jax.make_mesh((8,), ("data",))
         ss = tasks.MTLSState(x=P("data"), y=P("data"), r=P("data"))
         isp = low_rank.FactoredIterate(u=P(), s=P(), v=P(), alpha=P(), count=P())
-        asp = frank_wolfe.EpochAux(P(), P(), P(), P())
+        asp = frank_wolfe.EpochAux(P(), P(), P(), P(), P())
         csp = frank_wolfe.EpochCarry(state=ss, iterate=isp, comm_state=(),
                                      t=P(), key=P())
 
