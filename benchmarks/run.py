@@ -24,6 +24,7 @@ def main() -> None:
         comm_cost,
         dfw_scaling,
         engine_bench,
+        gossip_consensus,
         imagenet_head,
         kernel_bench,
         logistic_convergence,
@@ -39,6 +40,11 @@ def main() -> None:
         "table1_comm_cost": comm_cost.run,
         "table1_comm_sweep": (lambda: comm_cost.run_sweep(fast=True))
         if args.fast else comm_cost.run_sweep,
+        # gossip_consensus keeps the gated hier.inter_bytes record at the
+        # same sizes in --fast: it is an HLO byte ratio of one compiled
+        # exchange, immune to runner speed; only the fit epochs shrink.
+        "gossip_consensus": (lambda: gossip_consensus.run(fast=True))
+        if args.fast else gossip_consensus.run,
         "fig1_mtls": (lambda: mtls_convergence.run(epochs=15, n=8000, d=128, m=128))
         if args.fast else mtls_convergence.run,
         "fig2_logistic": (lambda: logistic_convergence.run(epochs=12, n=4000, d=96, m=48))

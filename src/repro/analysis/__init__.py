@@ -2,7 +2,7 @@
 
 Two tiers, both wired into ``make analyze`` and CI:
 
-- ``analysis.lint`` — AST rules (``REP001``–``REP005``) encoding the repo's
+- ``analysis.lint`` — AST rules (``REP001``–``REP007``) encoding the repo's
   structural invariants: collectives only through ``repro.comm``, no
   implicit host syncs in hot paths, kernel packages ship the
   kernel/ops/ref trio, jit boundaries don't recompile per call. CLI:
@@ -13,7 +13,8 @@ Two tiers, both wired into ``make analyze`` and CI:
   test suites + ``tools/repro_contracts.py`` verify against compiled HLO
   and runtime counters.
 - ``analysis.hlo`` — the post-SPMD HLO walker both tiers measure with
-  (moved from ``launch/hlo_analysis``; compat re-export kept).
+  (the retired ``launch/hlo_analysis`` shim is gone; ``REP007`` rejects
+  imports of the old path).
 
 See ``docs/ANALYSIS.md`` for the rule catalog and how to add a rule or a
 contract.

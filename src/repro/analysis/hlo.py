@@ -2,8 +2,9 @@
 
 (Formerly ``repro.launch.hlo_analysis``; it moved here when the declarative
 contract checker ``repro.analysis.contracts`` was built on top of it — the
-walker is a correctness tool, not an execution-layer one. The old import
-path is kept as a compat re-export.)
+walker is a correctness tool, not an execution-layer one. The compat
+re-export at the old path has been deleted; lint rule ``REP007`` keeps it
+from coming back.)
 
 Why not just ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits each
 while-loop (lax.scan) body ONCE, so a 48-layer scanned model reports ~1/48 of
@@ -20,6 +21,15 @@ Per-device quantities returned:
                      factors: all-reduce 2x, all-gather/reduce-scatter 1x
                      (of the large shape), all-to-all & permute 1x
   collective_count — op counts by type (executed, i.e. trip-multiplied)
+
+The walker also parses each collective's ``replica_groups`` (both the
+explicit ``{{0,1},{2,3}}`` and the iota ``[G,S]<=[N]`` HLO spellings), which
+is what distinguishes a hierarchical topology's cheap intra-group psum from
+its expensive inter-group exchange. ``partition_crossing_bytes`` classifies
+every collective's wire bytes against a device partition (e.g. hosts):
+bytes of collectives whose replica groups stay inside one cell are
+``local``, the rest ``crossing`` — the measured quantity behind the
+``benchmarks/gossip_consensus.py`` inter-byte gate.
 """
 from __future__ import annotations
 
@@ -43,6 +53,47 @@ _COMPARE_RE = re.compile(r"compare\(([^)]*)\),?.*direction=(LT|LE|GT|GE)")
 
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
+
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{(\{[^{}]*\}(?:,\{[^{}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\](\S*)")
+_PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+
+
+def parse_replica_groups(line: str) -> Optional[List[List[int]]]:
+    """The replica groups of one collective op line, or ``None`` when the op
+    carries none (= one group spanning every participant).
+
+    Handles the explicit form ``replica_groups={{0,1,2,3},{4,5,6,7}}`` and
+    the iota form ``replica_groups=[G,S]<=[N]`` (G groups of S consecutive
+    ids). An iota spelling with a trailing reshape/transpose suffix is not
+    decoded — returned as ``None`` rather than guessed wrong. For a
+    ``collective-permute`` the ``source_target_pairs`` are returned as
+    2-element groups, so crossing classification sees every hop."""
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        groups = []
+        for grp in re.findall(r"\{([^{}]*)\}", m.group(1)):
+            ids = [int(v) for v in grp.split(",") if v.strip() != ""]
+            if ids:
+                groups.append(ids)
+        return groups or None
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        g, s, n, suffix = int(m.group(1)), int(m.group(2)), int(m.group(3)), m.group(4)
+        if suffix or g * s != n:
+            return None
+        return [[grp * s + j for j in range(s)] for grp in range(g)]
+    m = _PERMUTE_PAIRS_RE.search(line)
+    if m:
+        pairs = re.findall(r"\{(\d+),(\d+)\}", m.group(1))
+        return [[int(a), int(b)] for a, b in pairs] or None
+    return None
+
+
+def _groups_key(groups: Optional[List[List[int]]]) -> str:
+    if groups is None:
+        return "all"
+    return ";".join(",".join(str(i) for i in g) for g in groups)
 
 
 def _shape_bytes(shape_str: str) -> int:
@@ -76,6 +127,10 @@ class Costs:
     coll_detail: Dict[Tuple[str, str], List[float]] = dataclasses.field(
         default_factory=dict
     )
+    # (op_type, shape_str, groups_key) -> [executed_count, wire_bytes_total]
+    coll_groups: Dict[Tuple[str, str, str], List[float]] = dataclasses.field(
+        default_factory=dict
+    )
 
     def add(self, other: "Costs", mult: float = 1.0) -> None:
         self.flops += other.flops * mult
@@ -86,6 +141,10 @@ class Costs:
             self.coll_count[k] = self.coll_count.get(k, 0.0) + v * mult
         for k, (c, b) in other.coll_detail.items():
             cur = self.coll_detail.setdefault(k, [0.0, 0.0])
+            cur[0] += c * mult
+            cur[1] += b * mult
+        for k, (c, b) in other.coll_groups.items():
+            cur = self.coll_groups.setdefault(k, [0.0, 0.0])
             cur[0] += c * mult
             cur[1] += b * mult
 
@@ -179,6 +238,11 @@ class HloModule:
                 det = costs.coll_detail.setdefault((op, shape_str), [0.0, 0.0])
                 det[0] += 1.0
                 det[1] += wire
+                gkey = _groups_key(parse_replica_groups(ln))
+                grp = costs.coll_groups.setdefault(
+                    (op, shape_str, gkey), [0.0, 0.0])
+                grp[0] += 1.0
+                grp[1] += wire
             if op == "while":
                 called = _CALLED_RE.findall(ln)
                 cond = body = None
@@ -266,4 +330,57 @@ def analyze(hlo_text: str, top_k: int = 12) -> Dict:
             {"op": op, "shape": shape, "count": cnt, "wire_bytes": b}
             for (op, shape), (cnt, b) in top
         ],
+        "collective_groups": [
+            {"op": op, "shape": shape, "groups": gkey,
+             "count": cnt, "wire_bytes": b}
+            for (op, shape, gkey), (cnt, b) in sorted(
+                c.coll_groups.items(), key=lambda kv: -kv[1][1])
+        ],
     }
+
+
+def partition_crossing_bytes(
+    hlo_text: str, partition: List[List[int]]
+) -> Dict:
+    """Classify every collective's wire bytes against a device partition.
+
+    ``partition`` is a list of disjoint device-id cells (e.g. the per-host
+    groups ``[[0,1,2,3],[4,5,6,7]]``). A collective whose every replica
+    group stays inside one cell is ``local`` — it never touches the
+    boundary; everything else (including collectives with no
+    ``replica_groups``, which span all participants) is ``crossing`` and
+    contributes its full wire bytes. That makes ``crossing`` an upper bound
+    on inter-cell traffic — the right *relative* measure for comparing
+    topologies compiled at identical sizes, which is how the
+    ``gossip_consensus`` benchmark gates the hier inter-byte saving.
+
+    Returns ``{"crossing": bytes, "local": bytes, "crossing_count": n,
+    "local_count": n, "by_op": {op: crossing_bytes}}``.
+    """
+    cell_of: Dict[int, int] = {}
+    for ci, cell in enumerate(partition):
+        for dev in cell:
+            cell_of[int(dev)] = ci
+    c = HloModule(hlo_text).total_costs()
+    out = {"crossing": 0.0, "local": 0.0,
+           "crossing_count": 0.0, "local_count": 0.0}
+    by_op: Dict[str, float] = {}
+    for (op, _shape, gkey), (cnt, wire) in c.coll_groups.items():
+        if gkey == "all":
+            local = len(partition) <= 1
+        else:
+            local = True
+            for grp in gkey.split(";"):
+                cells = {cell_of.get(int(i), -1) for i in grp.split(",")}
+                if len(cells) > 1:
+                    local = False
+                    break
+        if local:
+            out["local"] += wire
+            out["local_count"] += cnt
+        else:
+            out["crossing"] += wire
+            out["crossing_count"] += cnt
+            by_op[op] = by_op.get(op, 0.0) + wire
+    out["by_op"] = by_op
+    return out

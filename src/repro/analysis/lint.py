@@ -25,6 +25,9 @@ Rules (see ``docs/ANALYSIS.md`` for the full catalog and rationale):
 - **REP005** ``print``/f-string on a traced value inside a jitted function
   (stale debug output at best, a tracer leak at worst; use
   ``jax.debug.print``).
+- **REP007** import of a *retired* module (a deleted compat shim, e.g.
+  ``repro.launch.hlo_analysis``) — the table in ``_RETIRED_MODULES`` names
+  the replacement, and the rule keeps the dead path from growing back.
 
 **Suppression.** A finding is silenced by an inline justification comment on
 the flagged line — ``# REP002-ok: <why this one is intentional>`` — or by an
@@ -435,6 +438,49 @@ def _check_rep006(ctx: FileContext) -> Iterator[Finding]:
             )
             if f:
                 yield f
+
+
+# Modules that have been deleted after a deprecation window.  Keyed by the
+# module basename (the last dotted component) so every import spelling —
+# absolute, relative, `from pkg import name` — resolves to the same entry;
+# the value is (retired dotted path, replacement dotted path).  Future
+# retirements just append a row; REP007 keeps the dead path from growing back.
+_RETIRED_MODULES: Dict[str, Tuple[str, str]] = {
+    "hlo_analysis": ("repro.launch.hlo_analysis", "repro.analysis.hlo"),
+}
+
+
+@_rule("REP007", "import of a retired module (deleted compat shim)")
+def _check_rep007(ctx: FileContext) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        hit: Optional[str] = None
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.split(".")[-1] in _RETIRED_MODULES:
+                    hit = alias.name.split(".")[-1]
+        elif isinstance(node, ast.ImportFrom):
+            # `from repro.launch.hlo_analysis import analyze` (any relative
+            # depth) and `from repro.launch import hlo_analysis` both count;
+            # `from repro.analysis import hlo as hlo_analysis` does not —
+            # only the real module name matters, not the local alias.
+            mod = node.module or ""
+            if mod.split(".")[-1] in _RETIRED_MODULES:
+                hit = mod.split(".")[-1]
+            else:
+                for alias in node.names:
+                    if alias.name in _RETIRED_MODULES:
+                        hit = alias.name
+        if hit is None:
+            continue
+        retired, replacement = _RETIRED_MODULES[hit]
+        f = ctx.finding(
+            "REP007", node,
+            f"`{retired}` was retired — import `{replacement}` instead "
+            "(the compat re-export was deleted after its deprecation "
+            "window; resurrecting the old path splits the import graph)",
+        )
+        if f:
+            yield f
 
 
 # ---------------------------------------------------------------------------

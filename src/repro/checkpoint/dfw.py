@@ -50,9 +50,16 @@ PyTree = Any
 # v2 appends the block solver's warm-start probe leaf to the carry (format 1
 # carries no probe — EpochCarry.probe defaults to the zero-leaf ``()``, so
 # v1 payloads restore leaf-for-leaf into the current treedef with a cold
-# probe). Writers stamp PAYLOAD_FORMAT; readers accept READABLE_FORMATS.
-PAYLOAD_FORMAT = 2
-READABLE_FORMATS = (1, 2)
+# probe). v3 records the run's comm ``topology`` in extra and fixes the
+# per-node-iterate convention: a gossip run's checkpoint stores the NODE-0
+# slice of the worker-stacked factored iterate (the payload shape is
+# therefore identical to a flat run's — v1/v2 readers of the iterate keep
+# working). A gossip resume re-broadcasts that slice to every node
+# (elastic); the optimization dynamics themselves resume bit-exactly, since
+# they read only the task state, which is saved in full. Writers stamp
+# PAYLOAD_FORMAT; readers accept READABLE_FORMATS.
+PAYLOAD_FORMAT = 3
+READABLE_FORMATS = (1, 2, 3)
 HISTORY_KEYS = ("loss", "gap", "sigma", "gamma", "k")
 
 # Manifest-extra fields restore_run hard-indexes to rebuild structure
@@ -90,6 +97,11 @@ class RunCheckpointer:
     ``extra`` is the run-configuration record stamped into every manifest;
     drivers fill it via ``run_extra``. ``save_every`` saves every Nth
     boundary (the final/early-stop boundary is always saved).
+
+    ``per_node_iterate=True`` (gossip-topology runs) declares that the
+    carry's factored-iterate leaves arrive worker-stacked ``(nw, ...)``;
+    ``save_segment`` then stores the node-0 slice, keeping the payload
+    shape identical to a flat run's (see the format-3 note above).
     """
 
     def __init__(
@@ -100,6 +112,7 @@ class RunCheckpointer:
         keep_last: Optional[int] = 2,
         extra: Optional[Dict] = None,
         telemetry=None,
+        per_node_iterate: bool = False,
     ):
         if save_every < 1:
             raise ValueError(f"save_every={save_every}: must be >= 1")
@@ -108,6 +121,7 @@ class RunCheckpointer:
                                     telemetry=telemetry)
         self.store = store
         self.save_every = save_every
+        self.per_node_iterate = per_node_iterate
         self.extra = dict(extra or {})
         missing = [k for k in REQUIRED_EXTRA if k not in self.extra]
         if missing:
@@ -129,8 +143,13 @@ class RunCheckpointer:
         masks: Optional[np.ndarray],
         done: bool,
     ) -> None:
+        it = carry.iterate
+        if self.per_node_iterate:
+            # Worker-stacked gossip iterate: store node 0's slice (all nodes
+            # agree to consensus tolerance; resume re-broadcasts it).
+            it = type(it)(*(leaf[0] for leaf in it))
         payload = {
-            "carry": carry._replace(iterate=low_rank.pack_live(carry.iterate)),
+            "carry": carry._replace(iterate=low_rank.pack_live(it)),
             "history": _history_arrays(history),
             "masks": (
                 np.zeros((0, 0), np.float32)

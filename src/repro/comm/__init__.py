@@ -1,22 +1,38 @@
 """Pluggable communication subsystem for the distributed power method.
 
-See ``base.py`` for the reducer contract, ``int8.py``/``topk.py`` for the
-compressed implementations, and ``docs/ALGORITHMS.md`` ("Communication
-layer") for the extended Table-1 and when compression is safe.
+Two orthogonal axes: the ``Reducer`` (``base.py``) encodes one collective's
+bytes (``int8.py``/``topk.py`` are the compressed implementations); the
+``Topology`` (``topology.py``) decides what graph those bytes flow over
+(flat psum master, master-less gossip, hierarchical two-level reduce). See
+``docs/ALGORITHMS.md`` ("Communication layer" and "Communication
+topologies") for the extended Table-1 and when compression is safe.
 """
-from . import base, int8, topk
+from . import base, int8, topk, topology
 from .base import DenseReducer, Reducer, make_reducer
 from .int8 import Int8Reducer, verify_quantize_kernels
 from .topk import TopKReducer
+from .topology import (
+    FlatTopology,
+    GossipTopology,
+    HierTopology,
+    Topology,
+    make_topology,
+)
 
 __all__ = [
     "base",
     "int8",
     "topk",
+    "topology",
     "Reducer",
     "DenseReducer",
     "Int8Reducer",
     "TopKReducer",
+    "Topology",
+    "FlatTopology",
+    "GossipTopology",
+    "HierTopology",
     "make_reducer",
+    "make_topology",
     "verify_quantize_kernels",
 ]

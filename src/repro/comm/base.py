@@ -18,20 +18,30 @@ handful of f32 scalars saves nothing and silently corrupts step sizes and
 the duality-gap certificate.
 
 State contract: ``init_state(d, m)`` returns a per-worker pytree (empty for
-stateless reducers) that the caller threads through every ``reduce`` call —
+stateless reducers) that the caller threads through every ``exchange`` call —
 through the epoch's ``fori_loop`` and across epochs as part of the sharded
-state (each worker keeps its own residuals). ``reduce`` is pure and works
+state (each worker keeps its own residuals). ``exchange`` is pure and works
 serially (``axis_name=None``: the "sum" over one worker, with compression
 noise still applied — the serial run simulates the distributed encoding) and
 inside shard_map.
+
+The reducer answers *how bytes are encoded*; *what graph they flow over* is
+the ``Topology`` axis (``comm/topology.py``), whose ``all_reduce`` mirrors
+``exchange`` — a ``hier:<g>`` topology runs a reducer on its inter-group hop
+only, by passing ``groups=`` (XLA ``axis_index_groups``) through the helpers
+below.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Union
+import warnings
+from typing import Any, List, Optional, Sequence, Union
 
 import jax
 
+from ..specs import CommSpec, parse_comm  # noqa: F401
+
 AxisName = Optional[Union[str, Sequence[str]]]
+Groups = Optional[List[List[int]]]
 PyTree = Any
 
 
@@ -62,7 +72,7 @@ class Reducer:
             self.init_state(d, m),
         )
 
-    def reduce(
+    def exchange(
         self,
         x: jax.Array,
         state: PyTree,
@@ -71,6 +81,7 @@ class Reducer:
         key: jax.Array,
         axis_name: AxisName = None,
         weight=None,
+        groups: Groups = None,
     ) -> tuple:
         """Sum local contributions ``x`` over ``axis_name``.
 
@@ -85,8 +96,22 @@ class Reducer:
         but *stateful* ones must: a sampled-out worker has to contribute
         nothing this round (not its stale residual) and leave its state
         untouched, or the driver's unbiased-reweighting argument breaks.
+
+        ``groups`` (XLA ``axis_index_groups``: a partition of the axis
+        indices) restricts the sum to each worker's own group — how a
+        ``hier`` topology runs the encoded exchange on the inter-group hop
+        only. ``None`` sums over the whole axis.
         """
         raise NotImplementedError
+
+    def reduce(self, x, state, *, slot, key, axis_name=None, weight=None,
+               groups=None):
+        """Deprecated pre-topology name for :meth:`exchange` (warns once)."""
+        _warn_reduce_deprecated()
+        return self.exchange(
+            x, state, slot=slot, key=key, axis_name=axis_name, weight=weight,
+            groups=groups,
+        )
 
     def wire_bytes(self, dim: int, num_workers: int) -> int:
         """Analytic wire bytes of one ``reduce`` of a (dim,) f32 vector
@@ -96,12 +121,33 @@ class Reducer:
         raise NotImplementedError
 
 
-def psum(x: jax.Array, axis_name: AxisName) -> jax.Array:
-    return x if axis_name is None else jax.lax.psum(x, axis_name)
+_REDUCE_DEPRECATION_WARNED = False
 
 
-def pmax(x: jax.Array, axis_name: AxisName) -> jax.Array:
-    return x if axis_name is None else jax.lax.pmax(x, axis_name)
+def _warn_reduce_deprecated() -> None:
+    # Warn once per process, not per call: ``reduce`` sits inside the power
+    # method's fori_loop, and a warning per trace step would bury the signal.
+    global _REDUCE_DEPRECATION_WARNED
+    if not _REDUCE_DEPRECATION_WARNED:
+        _REDUCE_DEPRECATION_WARNED = True
+        warnings.warn(
+            "Reducer.reduce(...) is deprecated; call Reducer.exchange(...) "
+            "(same signature — renamed to mirror Topology.all_reduce)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+
+
+def psum(x: jax.Array, axis_name: AxisName, groups: Groups = None) -> jax.Array:
+    if axis_name is None:
+        return x
+    return jax.lax.psum(x, axis_name, axis_index_groups=groups)
+
+
+def pmax(x: jax.Array, axis_name: AxisName, groups: Groups = None) -> jax.Array:
+    if axis_name is None:
+        return x
+    return jax.lax.pmax(x, axis_name, axis_index_groups=groups)
 
 
 def fold_axis_index(key: jax.Array, axis_name: AxisName) -> jax.Array:
@@ -129,8 +175,9 @@ class DenseReducer(Reducer):
 
     spec = "dense"
 
-    def reduce(self, x, state, *, slot, key, axis_name=None, weight=None):
-        return psum(x, axis_name), state
+    def exchange(self, x, state, *, slot, key, axis_name=None, weight=None,
+                 groups=None):
+        return psum(x, axis_name, groups), state
 
     def wire_bytes(self, dim: int, num_workers: int) -> int:
         return 2 * 4 * dim  # ring all-reduce: 2x the f32 vector
@@ -153,21 +200,18 @@ def make_reducer(
 
     ``use_pallas``/``interpret`` route the int8 quantize/dequantize pair
     through the ``kernels/quantize`` Pallas kernels (TPU) or the jnp ref.
+
+    The string grammar (and its error messages) lives in
+    ``repro.specs.parse_comm``; this function only constructs the object.
     """
     from . import int8 as int8_mod
     from . import topk as topk_mod
 
-    if spec == "dense":
+    c = parse_comm(spec)
+    if c.kind == "dense":
         return DenseReducer()
-    if spec == "int8":
+    if c.kind == "int8":
         return int8_mod.Int8Reducer(
             num_workers=num_workers, use_pallas=use_pallas, interpret=interpret
         )
-    if spec.startswith("topk:"):
-        k = int(spec.split(":")[1])
-        if k < 1:
-            raise ValueError(f"comm spec {spec!r}: k must be >= 1")
-        return topk_mod.TopKReducer(k=k)
-    raise ValueError(
-        f"unknown comm spec {spec!r} (expected 'dense', 'int8' or 'topk:r')"
-    )
+    return topk_mod.TopKReducer(k=c.k)

@@ -1,6 +1,6 @@
 """int8 stochastic-rounding reducer: quantize -> s8 psum -> dequantize.
 
-Per ``reduce`` of a (dim,) f32 vector:
+Per ``exchange`` of a (dim,) f32 vector:
 
 1. every worker computes its local absmax and a scalar f32 ``pmax`` makes it
    the *shared* per-vector scale s (the "scale exchange" — 8 wire bytes),
@@ -63,11 +63,16 @@ class Int8Reducer(base.Reducer):
     def budget(self) -> int:
         return max(1, 127 // self.num_workers)
 
-    def reduce(self, x, state, *, slot, key, axis_name=None, weight=None):
+    def exchange(self, x, state, *, slot, key, axis_name=None, weight=None,
+                 groups=None):
         # weight is ignored: x of a masked worker is exactly zero, which
         # quantizes to zero — no stale state to guard (stateless).
+        # groups restricts both the scale pmax and the s8 psum to each
+        # worker's own axis_index_group (the hier inter-group hop); the
+        # shared-scale overflow argument holds per group since the budget is
+        # sized to the group width.
         x = x.astype(jnp.float32)
-        scale = base.pmax(jnp.max(jnp.abs(x)), axis_name)  # shared per-vector s
+        scale = base.pmax(jnp.max(jnp.abs(x)), axis_name, groups)
         noise = jax.random.uniform(
             base.fold_axis_index(key, axis_name), x.shape, jnp.float32
         )
@@ -75,7 +80,7 @@ class Int8Reducer(base.Reducer):
             budget=self.budget, use_pallas=self.use_pallas, interpret=self.interpret
         )
         q = qops.quantize(x, noise, scale, **kw)
-        total = base.psum(q, axis_name)  # s8 on the wire
+        total = base.psum(q, axis_name, groups)  # s8 on the wire
         return qops.dequantize(total, scale, **kw), state
 
     def wire_bytes(self, dim: int, num_workers: int) -> int:

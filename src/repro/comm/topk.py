@@ -10,7 +10,8 @@ signal (classic EF-SGD argument — for a constant input the deviation of the
 running mean from the truth decays as O(1/T); ``tests/test_comm.py`` pins
 both properties).
 
-Wire cost per reduce: two all-gathers of (N, k) — int32 indices + f32 values,
+Wire cost per exchange: two all-gathers of (N, k) — int32 indices + f32
+values,
 ``8 * N * k`` bytes versus the dense ``8 * dim``. Compression wins while
 ``N * k < dim``: right for the big (d,) u-vectors, marginal for small m.
 
@@ -54,7 +55,8 @@ class TopKReducer(base.Reducer):
             "v": jax.ShapeDtypeStruct((m,), jnp.float32),
         }
 
-    def reduce(self, x, state, *, slot, key, axis_name=None, weight=None):
+    def exchange(self, x, state, *, slot, key, axis_name=None, weight=None,
+                 groups=None):
         e = state[slot]
         c = x.astype(jnp.float32) + e
         k = min(self.k, c.shape[0])
@@ -77,8 +79,10 @@ class TopKReducer(base.Reducer):
             return sparse_local, new_state
         # index+value all-gather, then every worker reassembles the sum;
         # duplicate indices across workers accumulate via scatter-add.
-        gi = jax.lax.all_gather(idx, axis_name)  # (N, k) int32
-        gv = jax.lax.all_gather(vals, axis_name)  # (N, k) f32
+        # groups narrows the gather to this worker's axis_index_group (the
+        # hier inter-group hop): N becomes the group width.
+        gi = jax.lax.all_gather(idx, axis_name, axis_index_groups=groups)
+        gv = jax.lax.all_gather(vals, axis_name, axis_index_groups=groups)
         total = jnp.zeros_like(c).at[gi.reshape(-1)].add(gv.reshape(-1))
         return total, new_state
 

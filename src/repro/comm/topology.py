@@ -1,0 +1,425 @@
+"""Exchange graphs for the distributed power method — the *where* of comm.
+
+A ``Reducer`` (``comm/base.py``) decides how one collective's bytes are
+encoded; a ``Topology`` decides what graph those bytes flow over. The two
+axes compose: every topology routes its expensive hop through a reducer, so
+``topology="hier:2", comm="int8"`` means "exact f32 psum inside each group,
+quantized exchange across groups".
+
+Three graphs (spec grammar in ``repro.specs.parse_topology``):
+
+``flat``
+    One global all-reduce domain — byte-for-byte the paper's BSP master.
+    ``FlatTopology(reducer).all_reduce`` *is* ``reducer.exchange``, so
+    installing the default ``flat``/``dense`` pair leaves the legacy HLO
+    untouched.
+
+``ring`` / ``gossip:k``
+    Master-less neighbor averaging (Bellet et al., arXiv:1404.2644): no
+    global collective at all. Each mixing round every worker replaces its
+    value with the uniform average of itself and its k ring neighbors
+    (offsets ±1..±k/2) moved via ``ppermute``; after R rounds each node
+    holds ``(W^R x)_i`` for the doubly-stochastic circulant W, and
+    ``N * (W^R x)_i`` is its *local estimate* of the global sum. Estimates
+    differ per node by O(λ₂^R) where λ₂ is W's second eigenvalue — the
+    default R is auto-sized from λ₂ so the consensus error lands at
+    ``CONSENSUS_TARGET``. Downstream quantities (singular vectors, duality
+    gaps) become per-node; the driver keeps per-node iterates and certifies
+    convergence with the *worst* per-node gap (a valid global certificate
+    at consensus, pinned by ``tests/test_topology.py``).
+
+``hier:<g>``
+    Two-level reduce for multi-host meshes (``launch/multihost.py``): an
+    exact dense psum inside each of the g groups (the cheap intra-host hop)
+    followed by the installed reducer exchanged across groups only (XLA
+    ``axis_index_groups``), so compression spends its noise budget where
+    the bytes are expensive. With the dense reducer the result equals the
+    flat psum up to f32 re-association (bit-exact when every partial sum is
+    representable, e.g. integer-valued inputs — pinned in tests).
+
+``Topology.exchange`` has the exact ``Reducer.exchange`` signature, so the
+power method treats a topology as "the comm object" without branching; the
+extra surface is ``rounds_per_exchange``, per-hop byte accounting
+(``hop_wire_bytes``), and an HLO-checkable ``collective_contract``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..specs import SpecError, TopologySpec, parse_topology
+from . import base
+from .base import AxisName, PyTree, Reducer
+
+#: Target per-node consensus error (relative to the true mean) that the
+#: auto-sized gossip round count R aims for: R = ceil(log target / log λ₂).
+#: 1e-2 keeps the LMO direction error inside the multiplicative-error regime
+#: of the paper's Theorem 2 while staying ~20 rounds on an 8-ring.
+CONSENSUS_TARGET = 1e-2
+
+
+def _merge_counts(*dicts: Dict[str, float]) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for d in dicts:
+        for k, v in d.items():
+            out[k] = out.get(k, 0.0) + float(v)
+    return out
+
+
+def _reducer_collective_counts(reducer: Reducer) -> Dict[str, float]:
+    """HLO collective ops emitted by ONE ``reducer.exchange`` (the vocabulary
+    of ``analysis.hlo.COLLECTIVES``)."""
+    spec = reducer.spec
+    if spec == "dense":
+        return {"all-reduce": 1.0}
+    if spec == "int8":
+        return {"all-reduce": 2.0}  # f32 scale pmax + s8 psum
+    if spec.startswith("topk:"):
+        return {"all-gather": 2.0}  # int32 indices + f32 values
+    raise ValueError(f"no collective profile for reducer spec {spec!r}")
+
+
+def _single_axis(axis_name: AxisName) -> str:
+    """Gossip/hier address workers by index along ONE mesh axis."""
+    if isinstance(axis_name, str):
+        return axis_name
+    names = tuple(axis_name)
+    if len(names) != 1:
+        raise ValueError(
+            f"topology collectives need a single mesh axis, got {names!r}"
+        )
+    return names[0]
+
+
+class Topology:
+    """Interface of an exchange graph (see module docstring).
+
+    ``spec`` is the parseable name (``make_topology(t.spec, ...)``
+    round-trips); ``reducer`` is the encoding installed on the expensive
+    hop. ``exchange`` aliases ``all_reduce`` with the full
+    ``Reducer.exchange`` signature so a ``Topology`` can stand wherever a
+    reducer is accepted (the power method's ``reducer=`` slot).
+    """
+
+    spec: str = "base"
+    reducer: Reducer
+    num_workers: int = 1
+
+    #: True when ``all_reduce`` returns *per-node estimates* (gossip) rather
+    #: than one replicated value — the driver must then carry per-node
+    #: iterates and aggregate gap certificates with a worst-case pmax.
+    per_node: bool = False
+
+    @property
+    def rounds_per_exchange(self) -> int:
+        """Sequential collective rounds issued by one ``all_reduce``."""
+        raise NotImplementedError
+
+    def init_state(self, d: int, m: int) -> PyTree:
+        return self.reducer.init_state(d, m)
+
+    def state_spec(self, d: int, m: int) -> PyTree:
+        return self.reducer.state_spec(d, m)
+
+    def all_reduce(
+        self,
+        x: jax.Array,
+        state: PyTree,
+        *,
+        slot: str,
+        key: jax.Array,
+        axis_name: AxisName = None,
+        weight=None,
+    ) -> tuple:
+        """Estimate the global sum of ``x`` over ``axis_name`` through this
+        graph. Same contract as ``Reducer.exchange`` (slot/key/weight
+        semantics, ``(estimate, new_state)`` return); for a per-node
+        topology the estimate differs across workers."""
+        raise NotImplementedError
+
+    def exchange(self, x, state, *, slot, key, axis_name=None, weight=None,
+                 groups=None):
+        if groups is not None:
+            raise ValueError(
+                "Topology.exchange does not accept groups= — the graph IS "
+                "the grouping"
+            )
+        return self.all_reduce(
+            x, state, slot=slot, key=key, axis_name=axis_name, weight=weight
+        )
+
+    def collective_counts(self, num_exchanges: int = 1) -> Dict[str, float]:
+        """Executed HLO collective counts for ``num_exchanges`` calls."""
+        raise NotImplementedError
+
+    def hop_wire_bytes(self, dim: int) -> Dict[str, int]:
+        """Analytic wire bytes of one exchange of a (dim,) f32 vector,
+        broken down by hop (``global`` / ``neighbor`` / ``intra`` +
+        ``inter``) — feeds the engine's per-hop comm counters."""
+        raise NotImplementedError
+
+    def wire_bytes(self, dim: int, num_workers: int) -> int:
+        # Reducer-compatible total so existing accounting keeps working.
+        return sum(self.hop_wire_bytes(dim).values())
+
+    def collective_contract(
+        self, num_exchanges: int = 1, *, name: Optional[str] = None
+    ):
+        """An ``analysis.contracts.Contract`` pinning exactly the collectives
+        this graph is allowed to emit over ``num_exchanges`` exchanges."""
+        from ..analysis import contracts  # local: analysis is a heavier layer
+
+        counts = {
+            k: v * num_exchanges
+            for k, v in self.collective_counts(1).items()
+        }
+        return contracts.Contract(
+            name=name or f"comm.topology[{self.spec}]",
+            collective_counts=counts,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatTopology(Topology):
+    """One global all-reduce domain — pure delegation to the reducer, so the
+    default ``flat`` routing is bit-exact legacy behavior."""
+
+    reducer: Reducer = dataclasses.field(default_factory=base.DenseReducer)
+    num_workers: int = 1
+    spec: str = "flat"
+    per_node = False
+
+    @property
+    def rounds_per_exchange(self) -> int:
+        return 1
+
+    def all_reduce(self, x, state, *, slot, key, axis_name=None, weight=None):
+        return self.reducer.exchange(
+            x, state, slot=slot, key=key, axis_name=axis_name, weight=weight
+        )
+
+    def collective_counts(self, num_exchanges: int = 1) -> Dict[str, float]:
+        return {
+            k: v * num_exchanges
+            for k, v in _reducer_collective_counts(self.reducer).items()
+        }
+
+    def hop_wire_bytes(self, dim: int) -> Dict[str, int]:
+        return {"global": self.reducer.wire_bytes(dim, self.num_workers)}
+
+
+def gossip_lambda2(num_workers: int, degree: int) -> float:
+    """Second-largest |eigenvalue| of the uniform gossip mixing matrix
+    ``W = (I + Σ_o S_o) / (degree+1)`` over ring offsets ±1..±degree/2
+    (circulant, so the spectrum is closed-form). Governs the per-round
+    consensus contraction: error ∝ λ₂^rounds."""
+    half = degree // 2
+    lam2 = 0.0
+    for j in range(1, num_workers):
+        lam = (
+            1.0
+            + sum(
+                2.0 * math.cos(2.0 * math.pi * o * j / num_workers)
+                for o in range(1, half + 1)
+            )
+        ) / (degree + 1)
+        lam2 = max(lam2, abs(lam))
+    return lam2
+
+
+def default_gossip_rounds(num_workers: int, degree: int) -> int:
+    """Rounds R with λ₂^R <= CONSENSUS_TARGET (min 1; 1 when the graph is
+    complete and one round already averages everything)."""
+    if num_workers <= 1:
+        return 1
+    lam2 = gossip_lambda2(num_workers, degree)
+    if lam2 <= 0.0:
+        return 1
+    return max(1, math.ceil(math.log(CONSENSUS_TARGET) / math.log(lam2)))
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipTopology(Topology):
+    """Master-less k-regular gossip over ``ppermute`` neighbor exchange.
+
+    ``all_reduce`` returns each node's own estimate ``N * (W^R x)_node`` of
+    the global sum (unbiased across nodes; per-node deviation O(λ₂^R)).
+    Serial (``axis_name=None``) it is the identity — one node is its own
+    consensus — so serial trajectories match ``flat``/``dense`` exactly.
+    """
+
+    num_workers: int = 1
+    degree: int = 2
+    rounds: int = 1
+    reducer: Reducer = dataclasses.field(default_factory=base.DenseReducer)
+    spec: str = "ring"
+    per_node = True
+
+    @property
+    def rounds_per_exchange(self) -> int:
+        return self.rounds
+
+    def _offsets(self) -> List[int]:
+        half = self.degree // 2
+        return [o for i in range(1, half + 1) for o in (i, -i)]
+
+    def all_reduce(self, x, state, *, slot, key, axis_name=None, weight=None):
+        # weight is ignored beyond the caller's pre-scaling of x: mixing is
+        # linear, so the estimate stays an unbiased image of the masked sum.
+        if axis_name is None:
+            return x, state
+        name = _single_axis(axis_name)
+        nw = self.num_workers
+        offsets = self._offsets()
+        inv = jnp.float32(1.0 / (len(offsets) + 1))
+        for _ in range(self.rounds):
+            acc = x
+            for o in offsets:
+                perm = [(i, (i + o) % nw) for i in range(nw)]
+                acc = acc + jax.lax.ppermute(x, name, perm)
+            x = acc * inv
+        return jnp.float32(nw) * x, state
+
+    def collective_counts(self, num_exchanges: int = 1) -> Dict[str, float]:
+        return {
+            "collective-permute": float(  # REP002-ok: host ints, analytic count
+                num_exchanges * self.rounds * self.degree
+            )
+        }
+
+    def hop_wire_bytes(self, dim: int) -> Dict[str, int]:
+        # Each ppermute moves the full f32 vector once (1x wire factor).
+        return {"neighbor": self.rounds * self.degree * 4 * dim}
+
+
+@dataclasses.dataclass(frozen=True)
+class HierTopology(Topology):
+    """Two-level reduce: exact psum inside each of ``groups`` contiguous
+    groups, then the installed reducer exchanged across groups only.
+
+    The inner reducer is built for a world of ``groups`` participants (one
+    delegate per group — e.g. int8's overflow budget is 127 // g, not
+    127 // N), and receives ``groups=`` = the cross-group partition, so its
+    collectives never leave the cheap intra hop unencoded bytes to carry.
+    """
+
+    num_workers: int = 2
+    groups: int = 2
+    reducer: Reducer = dataclasses.field(default_factory=base.DenseReducer)
+    spec: str = "hier:2"
+    per_node = False
+
+    @property
+    def group_size(self) -> int:
+        return self.num_workers // self.groups
+
+    def _intra_groups(self) -> List[List[int]]:
+        s = self.group_size
+        return [[g * s + j for j in range(s)] for g in range(self.groups)]
+
+    def _cross_groups(self) -> List[List[int]]:
+        s = self.group_size
+        return [[j + g * s for g in range(self.groups)] for j in range(s)]
+
+    @property
+    def rounds_per_exchange(self) -> int:
+        return 2 if self.group_size > 1 else 1
+
+    def all_reduce(self, x, state, *, slot, key, axis_name=None, weight=None):
+        if axis_name is None:
+            # Serial simulation: the intra sum over one worker is identity;
+            # the inter hop still applies the reducer's encoding noise.
+            return self.reducer.exchange(
+                x, state, slot=slot, key=key, axis_name=None, weight=weight
+            )
+        if self.group_size > 1:
+            x = base.psum(x, axis_name, self._intra_groups())
+        # Every worker holds its group's partial sum (replicated within the
+        # group), so all group_size cross-exchanges compute the same global
+        # sum — the result lands replicated without a broadcast hop.
+        return self.reducer.exchange(
+            x, state, slot=slot, key=key, axis_name=axis_name, weight=weight,
+            groups=self._cross_groups(),
+        )
+
+    def collective_counts(self, num_exchanges: int = 1) -> Dict[str, float]:
+        per = _reducer_collective_counts(self.reducer)
+        if self.group_size > 1:
+            per = _merge_counts(per, {"all-reduce": 1.0})
+        return {k: v * num_exchanges for k, v in per.items()}
+
+    def hop_wire_bytes(self, dim: int) -> Dict[str, int]:
+        hops = {"inter": self.reducer.wire_bytes(dim, self.groups)}
+        if self.group_size > 1:
+            hops["intra"] = 2 * 4 * dim  # ring all-reduce inside the group
+        return hops
+
+
+def make_topology(
+    spec,
+    *,
+    num_workers: int = 1,
+    comm: str = "dense",
+    rounds: Optional[int] = None,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+) -> Topology:
+    """Parse a ``topology=`` spec and build the graph for ``num_workers``.
+
+    ``comm`` is the encoding spec for the expensive hop (the global
+    collective for ``flat``, the inter-group exchange for ``hier`` — where
+    the reducer is sized to the *group count*, not the world). ``rounds``
+    overrides the auto-sized gossip mixing-round count (default: enough for
+    λ₂^R <= CONSENSUS_TARGET). Worker-count constraints (degree < N, N
+    divisible by g) are validated here; the string grammar itself lives in
+    ``repro.specs.parse_topology``.
+    """
+    t: TopologySpec = parse_topology(spec)
+    if t.kind == "flat":
+        reducer = base.make_reducer(
+            comm, num_workers=num_workers,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+        return FlatTopology(
+            reducer=reducer, num_workers=num_workers, spec=t.spec
+        )
+    if t.kind == "gossip":
+        if num_workers > 1 and t.degree >= num_workers:
+            raise SpecError(
+                f"topology {t.spec!r}: gossip degree {t.degree} needs more "
+                f"than {t.degree} workers, got num_workers={num_workers}"
+            )
+        if base.parse_comm(comm).kind != "dense":
+            raise SpecError(
+                f"topology {t.spec!r} requires comm 'dense' (gossip "
+                f"exchanges are neighbor averages, not compressible "
+                f"collectives), got comm {comm!r}"
+            )
+        r = rounds if rounds is not None else default_gossip_rounds(
+            num_workers, t.degree
+        )
+        if r < 1:
+            raise SpecError(
+                f"topology {t.spec!r}: rounds must be >= 1, got {r}"
+            )
+        return GossipTopology(
+            num_workers=num_workers, degree=t.degree, rounds=r, spec=t.spec
+        )
+    # hier (num_workers == 1 is the serial simulation: no intra hop, the
+    # reducer still encodes at group width so serial mirrors the wire noise)
+    if num_workers > 1 and num_workers % t.groups != 0:
+        raise SpecError(
+            f"topology {t.spec!r}: num_workers={num_workers} is not "
+            f"divisible into {t.groups} equal groups"
+        )
+    reducer = base.make_reducer(
+        comm, num_workers=t.groups,
+        use_pallas=use_pallas, interpret=interpret,
+    )
+    return HierTopology(
+        num_workers=num_workers, groups=t.groups, reducer=reducer, spec=t.spec
+    )

@@ -241,6 +241,8 @@ def sharded_carry_spec(
     state_spec: PyTree,
     comm_state_example: PyTree = (),
     probe_example: PyTree = (),
+    *,
+    per_node_iterate: bool = False,
 ):
     """shard_map PartitionSpecs for an ``EpochCarry``: task state rows
     sharded over the data axes, iterate/counter/key replicated, and every
@@ -249,14 +251,22 @@ def sharded_carry_spec(
     solver's warm-start probe is replicated like the iterate (``()`` for
     rank1 — zero extra leaves).
 
+    ``per_node_iterate=True`` (gossip topologies) gives the factored iterate
+    the same leading-worker-axis treatment as the reducer state: every
+    worker evolves its *own* inexact-consensus iterate, so the driver stacks
+    the leaves to ``(nw, ...)`` and shard_map hands each worker its slice.
+
     ``comm_state_example`` is one worker's (unstacked) reducer state;
     ``probe_example`` the replicated probe block (or ``()``)."""
     from jax.sharding import PartitionSpec as P
 
     ax = axis_or_axes
+    it_spec = P(ax) if per_node_iterate else P()
     return EpochCarry(
         state=state_spec,
-        iterate=low_rank.FactoredIterate(u=P(), s=P(), v=P(), alpha=P(), count=P()),
+        iterate=low_rank.FactoredIterate(
+            u=it_spec, s=it_spec, v=it_spec, alpha=it_spec, count=it_spec
+        ),
         comm_state=jax.tree.map(lambda _: P(ax), comm_state_example),
         t=P(),
         key=P(),
@@ -264,18 +274,34 @@ def sharded_carry_spec(
     )
 
 
-def strip_worker_axis(carry: EpochCarry) -> EpochCarry:
+def strip_worker_axis(
+    carry: EpochCarry, *, per_node_iterate: bool = False
+) -> EpochCarry:
     """Inside a shard_map region: drop the leading worker axis off the comm
-    leaves — a worker owns its (1, ...) slice of the stacked reducer state."""
-    return carry._replace(
+    leaves — a worker owns its (1, ...) slice of the stacked reducer state.
+    With ``per_node_iterate`` the factored-iterate leaves are stacked the
+    same way and stripped too."""
+    carry = carry._replace(
         comm_state=jax.tree.map(lambda a: a[0], carry.comm_state)
     )
+    if per_node_iterate:
+        carry = carry._replace(
+            iterate=jax.tree.map(lambda a: a[0], carry.iterate)
+        )
+    return carry
 
 
-def restore_worker_axis(carry: EpochCarry) -> EpochCarry:
-    return carry._replace(
+def restore_worker_axis(
+    carry: EpochCarry, *, per_node_iterate: bool = False
+) -> EpochCarry:
+    carry = carry._replace(
         comm_state=jax.tree.map(lambda a: a[None], carry.comm_state)
     )
+    if per_node_iterate:
+        carry = carry._replace(
+            iterate=jax.tree.map(lambda a: a[None], carry.iterate)
+        )
+    return carry
 
 
 def shard_map_segment_wrapper(
@@ -286,26 +312,34 @@ def shard_map_segment_wrapper(
     comm_state_example: PyTree = (),
     probe_example: PyTree = (),
     has_masks: bool = False,
+    per_node_iterate: bool = False,
 ) -> Callable[[Callable], Callable]:
     """Build the canonical ``segment_wrapper``: shard_map with the task
     state row-sharded, iterate/scalars/key/probe replicated, straggler masks
     column-sharded, and reducer state carried with a leading worker axis
     (sharded like the data rows) that is stripped inside the region.
+    ``per_node_iterate`` extends that leading-axis treatment to the factored
+    iterate (gossip topologies; see ``sharded_carry_spec``).
     """
     from jax.sharding import PartitionSpec as P
 
     ax = axis_or_axes
     carry_spec = sharded_carry_spec(
-        ax, state_spec, comm_state_example, probe_example
+        ax, state_spec, comm_state_example, probe_example,
+        per_node_iterate=per_node_iterate,
     )
     aux_spec = EpochAux(P(), P(), P(), P(), P())
 
     def wrap(seg_fn):
         def step(carry, done, epochs_run, *masks):
             carry, done, epochs_run, aux = seg_fn(
-                strip_worker_axis(carry), done, epochs_run, *masks
+                strip_worker_axis(carry, per_node_iterate=per_node_iterate),
+                done, epochs_run, *masks
             )
-            return restore_worker_axis(carry), done, epochs_run, aux
+            return (
+                restore_worker_axis(carry, per_node_iterate=per_node_iterate),
+                done, epochs_run, aux,
+            )
 
         mask_specs = (P(None, ax),) if has_masks else ()
         return shard_map_compat(
@@ -524,13 +558,17 @@ def run_epochs(
             hlo_flops=info["flops"],
         )
 
-    # Analytic per-segment comm cost: 2*K rounds per epoch (K psums of
-    # d-vectors + K of m-vectors), wire bytes from the reducer's own
+    # Analytic per-segment comm cost: 2*K *exchanges* per epoch (K for
+    # d-vectors + K for m-vectors), wire bytes from the reducer's own
     # accounting, logical bytes at the dense-f32 convention. The block
-    # solver keeps the round count and widens each payload by k (flattened
-    # (d,k)/(m,k) blocks through the same reducer).
+    # solver keeps the exchange count and widens each payload by k
+    # (flattened (d,k)/(m,k) blocks through the same reducer). A topology
+    # (``comm.Topology`` quacks like a Reducer here) may spend several
+    # collective rounds per exchange (gossip's R mixing rounds), which
+    # ``rounds_per_exchange`` scales into the round count.
     def _comm_cost(seg: Segment) -> Dict[str, float]:
-        rounds = 2 * seg.k * seg.length
+        rpe = int(getattr(reducer, "rounds_per_exchange", 1))
+        rounds = 2 * seg.k * seg.length * rpe
         logical = 8.0 * (task.d + task.m) * k_block * seg.k * seg.length
         wire = float(
             seg.k * seg.length * (
@@ -539,6 +577,18 @@ def run_epochs(
             )
         )
         return {"rounds": rounds, "logical_bytes": logical, "wire_bytes": wire}
+
+    # Per-hop byte split (topologies only: hier's intra/inter, gossip's
+    # neighbor links, flat's single global hop). Empty for plain reducers.
+    def _hop_cost(seg: Segment) -> Dict[str, float]:
+        hop_fn = getattr(reducer, "hop_wire_bytes", None)
+        if hop_fn is None:
+            return {}
+        out: Dict[str, float] = {}
+        for dim in (task.d * k_block, task.m * k_block):
+            for hop, nbytes in hop_fn(dim).items():
+                out[hop] = out.get(hop, 0.0) + float(seg.k * seg.length * nbytes)
+        return out
 
     carry = init_carry(state, iterate, key, comm_state, t=start_t, probe=probe)
     done = jnp.zeros((), jnp.bool_)
@@ -654,6 +704,20 @@ def run_epochs(
         reg.counter("comm.rounds").inc(cost["rounds"])
         reg.counter("comm.logical_bytes").inc(cost["logical_bytes"])
         reg.counter("comm.wire_bytes").inc(cost["wire_bytes"])
+        hops = _hop_cost(seg)
+        if hops:
+            # Topology-mode accounting: one span naming the graph plus a
+            # per-hop byte counter split (comm.hop_bytes.intra/inter/...).
+            tel.complete(
+                "comm.topology", "comm", t0, dur,
+                topology=getattr(reducer, "spec", None),
+                rounds_per_exchange=int(
+                    getattr(reducer, "rounds_per_exchange", 1)
+                ),
+                **{f"bytes_{h}": b for h, b in sorted(hops.items())},
+            )
+            for h, b in hops.items():
+                reg.counter(f"comm.hop_bytes.{h}").inc(b)
         if sspec.kind == "block":
             reg.gauge("dfw.block.k").set(k_block)
         for j in range(seg.length):

@@ -43,7 +43,14 @@ from .trace_norm import duality_gap
 # Scalar psums (loss, <W,grad>, line-search terms) stay *exact* by design —
 # see comm/base.py — but still route through the comm chokepoint rather than
 # raw lax.psum (lint rule REP001), so collective call sites stay auditable.
+from ..comm.base import pmax as _pmax
 from ..comm.base import psum as _psum
+
+# Solver-spec grammar lives in the shared ``repro.specs`` module (one
+# SpecError style across the solver/comm/topology axes); re-exported here
+# because this module coined ``parse_solver`` and call sites import it from
+# here.
+from ..specs import SolverSpec, parse_solver  # noqa: F401
 
 PyTree = Any
 
@@ -106,70 +113,6 @@ def init_carry(
 #: the gap certificate's scale, further iterations cannot change the FW step
 #: materially and the remaining K budget is skipped on device.
 ADAPT_RTOL = 0.05
-
-
-class SolverSpec(NamedTuple):
-    """Parsed LMO solver tier (see ``parse_solver``)."""
-
-    kind: str  # "rank1" | "block"
-    k: int  # block width (1 for rank1)
-    adaptive: bool  # spectral-gap-adaptive K(t): stop iterating early
-    cold: bool  # ignore the carried warm-start probe (ablation knob)
-
-
-def parse_solver(spec) -> SolverSpec:
-    """Parse a solver spec string — THE single validation point shared by
-    ``frank_wolfe.fit``, ``launch.dfw.fit``/``fit_serial`` and ``DFWConfig``.
-
-    Grammar::
-
-        "rank1"                  paper's rank-1 LMO (Algorithm 2)
-        "block:K"                rank-K block LMO (BlockFW tier)
-        "block:K:adapt"          + spectral-gap-adaptive power iterations
-        "block:K:cold"           + ignore the warm-start probe (ablation)
-        "block:K:adapt:cold"     flags compose in any order
-
-    Raises ``ValueError`` on malformed specs — ``block:0``, ``block:-3``,
-    ``block:`` (no k), unknown flags, unknown solver names. An already-parsed
-    ``SolverSpec`` passes through unchanged.
-    """
-    if isinstance(spec, SolverSpec):
-        return spec
-    if not isinstance(spec, str):
-        raise ValueError(f"solver spec must be a string, got {type(spec).__name__}")
-    if spec == "rank1":
-        return SolverSpec(kind="rank1", k=1, adaptive=False, cold=False)
-    if spec == "block" or spec.startswith("block:"):
-        parts = spec.split(":")
-        if len(parts) < 2 or parts[1] == "":
-            raise ValueError(
-                f"solver {spec!r}: block solver needs a width, e.g. 'block:4'"
-            )
-        try:
-            k = int(parts[1])
-        except ValueError:
-            raise ValueError(
-                f"solver {spec!r}: block width {parts[1]!r} is not an integer"
-            ) from None
-        if k < 1:
-            raise ValueError(
-                f"solver {spec!r}: block width must be >= 1, got {k}"
-            )
-        adaptive = cold = False
-        for flag in parts[2:]:
-            if flag == "adapt":
-                adaptive = True
-            elif flag == "cold":
-                cold = True
-            else:
-                raise ValueError(
-                    f"solver {spec!r}: unknown flag {flag!r} "
-                    "(expected 'adapt' and/or 'cold')"
-                )
-        return SolverSpec(kind="block", k=k, adaptive=adaptive, cold=cold)
-    raise ValueError(
-        f"unknown solver {spec!r} (expected 'rank1' or 'block:K[:adapt][:cold]')"
-    )
 
 
 def solver_probe_shape(spec, m: int) -> Optional[tuple]:
@@ -288,6 +231,19 @@ def make_epoch_step(
         from ..comm.base import DenseReducer  # leaf import; no cycle
 
         reducer = DenseReducer()
+    # Per-node topologies (comm.GossipTopology) leave every worker with its
+    # own inexact-consensus LMO direction, so sigma/gap become per-node
+    # quantities. The aux stays replicated (engine out_specs demand it) by
+    # taking the pmax: gap <= tol then certifies *every* node's iterate —
+    # the conservative decentralized stopping rule.
+    per_node = bool(getattr(reducer, "per_node", False))  # REP002-ok: host attribute
+    if per_node and sspec.kind == "block":
+        raise ValueError(
+            "per-node topologies (gossip) support only the rank1 solver: the "
+            "block tier orthonormalizes against a consensus block, which a "
+            "master-less exchange cannot provide — use topology='flat' or "
+            "'hier:g' with solver='block:k'"
+        )
 
     def epoch(carry: EpochCarry, worker_weight: Optional[jax.Array] = None):
         state, it = carry.state, carry.iterate
@@ -377,6 +333,15 @@ def make_epoch_step(
         )
 
         gap = duality_gap(inner, res.sigma, mu)
+        sigma = res.sigma
+        if per_node:
+            # inner/loss are exact global psums (already replicated); only
+            # the gossip-estimated sigma — and hence the gap — differs per
+            # node. pmax makes both replicated: the recorded gap upper-bounds
+            # every node's certificate, so early stop fires only when ALL
+            # nodes are within tol.
+            gap = _pmax(gap, axis_name)
+            sigma = _pmax(sigma, axis_name)
 
         if step_size == "linesearch":
             numer, denom = task.linesearch_terms(state, res.u, res.v, mu)
@@ -389,7 +354,7 @@ def make_epoch_step(
         state = task.update(state, res.u, res.v, gamma, mu)
         it = low_rank.fw_update(it, res.u, res.v, gamma, mu)
         aux = EpochAux(
-            loss=loss, gap=gap, sigma=res.sigma, gamma=gamma,
+            loss=loss, gap=gap, sigma=sigma, gamma=gamma,
             piters=jnp.full((), num_power_iters, jnp.float32),
         )
         return EpochCarry(

@@ -50,22 +50,35 @@ class BlockPowerResult(NamedTuple):
     iters: jax.Array  # () int32 iterations executed
 
 
-def collective_rounds_contract(num_iters: int):
+def collective_rounds_contract(num_iters: int, topology=None):
     """The paper's communication budget as a declared, checkable contract:
     K two-sided power iterations execute exactly 2K aggregation rounds
     (one all-reduce per matvec/rmatvec pair side), never 2K+1 — the
     carried-sigma invariant. Consumed by ``tests/test_power_method.py`` and
     ``tools/repro_contracts.py`` against the compiled HLO of a shard_map'd
-    ``power_iterations``."""
+    ``power_iterations``.
+
+    With a ``topology`` (``repro.comm.Topology``) the 2K exchanges route
+    through that graph instead of a flat all-reduce, and the contract pins
+    the graph's own collective profile (``ppermute`` rounds for gossip,
+    intra+inter split for hier) via ``Topology.collective_contract``."""
     from ..analysis.contracts import Contract  # lazy: analysis is tooling
 
+    if topology is not None:
+        return topology.collective_contract(
+            2 * num_iters,
+            name=(
+                f"power_method.collective_rounds"
+                f"[K={num_iters},topology={topology.spec}]"
+            ),
+        )
     return Contract(
         name=f"power_method.collective_rounds[K={num_iters}]",
         collective_counts={"all-reduce": 2.0 * num_iters},
     )
 
 
-def block_collective_rounds_contract(num_iters: int, k: int):
+def block_collective_rounds_contract(num_iters: int, k: int, topology=None):
     """Block analogue of ``collective_rounds_contract``: K block iterations
     still execute exactly 2K all-reduce rounds — the (k,k) Gram
     orthogonalization runs on the *already-reduced replicated* block, so
@@ -74,6 +87,14 @@ def block_collective_rounds_contract(num_iters: int, k: int):
     of wire-byte accounting); the round count is k-free by construction."""
     from ..analysis.contracts import Contract  # lazy: analysis is tooling
 
+    if topology is not None:
+        return topology.collective_contract(
+            2 * num_iters,
+            name=(
+                f"power_method.block_collective_rounds"
+                f"[K={num_iters},k={k},topology={topology.spec}]"
+            ),
+        )
     return Contract(
         name=f"power_method.block_collective_rounds[K={num_iters},k={k}]",
         collective_counts={"all-reduce": 2.0 * num_iters},
@@ -117,9 +138,13 @@ def power_iterations(
     surviving data's gradient — an unbiased LMO for the surviving partition
     (same weighting argument the paper uses for SVA).
 
-    ``reducer`` (a ``repro.comm.Reducer``) reroutes the two vector
-    aggregations through a compressed collective. Default ``None`` preserves
-    the exact-psum behavior bit for bit and returns a plain ``PowerResult``;
+    ``reducer`` (a ``repro.comm.Reducer``, or a ``repro.comm.Topology`` —
+    anything with the ``exchange`` contract) reroutes the two vector
+    aggregations through a compressed collective and/or a non-flat exchange
+    graph. Under a per-node topology (gossip) the aggregates differ across
+    workers, so ``u``/``v``/``sigma`` become per-node estimates. Default
+    ``None`` preserves the exact-psum behavior bit for bit and returns a
+    plain ``PowerResult``;
     with a reducer the return is ``(PowerResult, comm_state)`` where
     ``comm_state`` is the reducer's threaded per-worker state (pass the
     previous epoch's back in; ``None`` starts fresh via
@@ -163,14 +188,14 @@ def power_iterations(
         ki = jax.random.fold_in(key, i)
         # worker_weight rides along so stateful reducers can tell a masked
         # worker (whose w*matvec is zero but whose residual is not) from a
-        # live one — see comm/base.Reducer.reduce.
-        uu, cs = reducer.reduce(
+        # live one — see comm/base.Reducer.exchange.
+        uu, cs = reducer.exchange(
             w * matvec(v), cs, slot="u",
             key=jax.random.fold_in(ki, 0), axis_name=axis_name,
             weight=worker_weight,
         )
         u = uu / (jnp.linalg.norm(uu) + _EPS)
-        vv, cs = reducer.reduce(
+        vv, cs = reducer.exchange(
             w * rmatvec(u), cs, slot="v",
             key=jax.random.fold_in(ki, 1), axis_name=axis_name,
             weight=worker_weight,
@@ -293,13 +318,13 @@ def block_power_iterations(
     def live(i, c):
         _, v, _, sigma, cs, done, iters = c
         ki = jax.random.fold_in(key, i)
-        uu, cs = reducer.reduce(
+        uu, cs = reducer.exchange(
             (w * matmat(v)).reshape(-1), cs, slot="u",
             key=jax.random.fold_in(ki, 0), axis_name=axis_name,
             weight=worker_weight,
         )
         ub = orthonormalize_block(uu.reshape(d, k))
-        vv, cs = reducer.reduce(
+        vv, cs = reducer.exchange(
             (w * rmatmat(ub)).reshape(-1), cs, slot="v",
             key=jax.random.fold_in(ki, 1), axis_name=axis_name,
             weight=worker_weight,

@@ -48,7 +48,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .. import comm as comm_lib
+from .. import comm as comm_lib, specs
 from ..checkpoint import dfw as ckpt
 from ..compat import shard_map_compat
 from ..core import engine, frank_wolfe, low_rank, tasks
@@ -92,6 +92,20 @@ class DFWConfig:
     sparsification with per-worker error feedback). Scalar aggregates stay
     exact under every setting. Applies to all three tasks — the reducer
     wraps the psum, not the task.
+
+    ``topology`` selects the *graph* those exchanges flow over
+    (``repro.comm.make_topology`` grammar): "flat" (one global all-reduce
+    domain — bit-exact legacy behavior), "ring"/"gossip:k" (master-less
+    neighbor averaging; every worker evolves its own iterate and the
+    recorded gap is the pmax over the per-node certificates, so early stop
+    fires only when all nodes are within ``gap_tol``; requires
+    ``comm="dense"`` and ``solver="rank1"``), or "hier:g" (two-level
+    reduce: exact psum inside each of g groups, ``comm``-encoded exchange
+    across groups — bit-exact vs flat under "dense", and the composition
+    point for int8/topk at scale). ``gossip_rounds`` overrides the number
+    of mixing rounds per exchange (default: auto-sized from the gossip
+    matrix's spectral gap to hit ~1% consensus error). The two axes are
+    orthogonal; ``repro.specs.validate`` rejects the meaningless corners.
 
     ``gap_tol`` stops the run once the psum'd duality-gap certificate
     satisfies ``gap <= gap_tol`` (checked on device every epoch, acted on at
@@ -147,6 +161,8 @@ class DFWConfig:
     step_size: str = "default"  # "default" (2/(t+2)) or "linesearch"
     solver: str = "rank1"  # LMO tier; see frank_wolfe.parse_solver
     comm: str = "dense"  # power-method collective encoding; see repro.comm
+    topology: str = "flat"  # exchange graph; see repro.comm.make_topology
+    gossip_rounds: Optional[int] = None  # mixing rounds/exchange (None = auto)
     data_axis: str = "data"
     sample_prob: float = 1.0
     reweight: bool = True
@@ -446,15 +462,32 @@ def make_sharded_epoch(
     sharded over ``cfg.data_axis`` (leaf (nw, d) outside, (1, d) per worker
     inside — the error-feedback residuals live with the worker that owns
     them, exactly like the task state rows; ``()`` for dense).
+
+    ``cfg.topology`` other than "flat" routes the exchanges through a
+    ``comm.Topology`` built for this mesh (a passed ``reducer`` is then
+    ignored — the topology builds its own inner reducer at the right
+    width); gossip topologies additionally give the factored iterate the
+    leading worker axis (see ``engine.sharded_carry_spec``).
     """
     axis = cfg.data_axis
-    if reducer is None:
-        reducer = comm_lib.DenseReducer()
+    tspec = specs.parse_topology(cfg.topology)
+    if tspec.kind == "flat":
+        if reducer is None:
+            reducer = comm_lib.DenseReducer()
+        comm_obj = reducer
+    else:
+        comm_obj = comm_lib.make_topology(
+            cfg.topology, num_workers=mesh.shape[axis], comm=cfg.comm,
+            rounds=cfg.gossip_rounds,
+            use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+        )
+        reducer = comm_obj.reducer
+    per_node = bool(getattr(comm_obj, "per_node", False))  # REP002-ok: host attribute
     sspec = frank_wolfe.parse_solver(cfg.solver)
     k_block = sspec.k if sspec.kind == "block" else 1
     ep = frank_wolfe.make_epoch_step(
         task, cfg.mu, num_power_iters, step_size=cfg.step_size, axis_name=axis,
-        reducer=reducer, solver=sspec,
+        reducer=comm_obj, solver=sspec,
     )
 
     carry_spec = engine.sharded_carry_spec(
@@ -462,12 +495,19 @@ def make_sharded_epoch(
         row_specs(state_example, axis),
         reducer.init_state(task.d * k_block, task.m * k_block),
         frank_wolfe.init_probe(sspec, task.m),
+        per_node_iterate=per_node,
     )
     aux_spec = EpochAux(P(), P(), P(), P(), P())
 
     def step(carry, mask):
-        carry, aux = ep(engine.strip_worker_axis(carry), worker_weight=mask[0])
-        return engine.restore_worker_axis(carry), aux
+        carry, aux = ep(
+            engine.strip_worker_axis(carry, per_node_iterate=per_node),
+            worker_weight=mask[0],
+        )
+        return (
+            engine.restore_worker_axis(carry, per_node_iterate=per_node),
+            aux,
+        )
 
     return shard_map_compat(
         step,
@@ -518,7 +558,8 @@ def _resume_complete(snap: ckpt.RunSnapshot, cfg: DFWConfig) -> bool:
 
 
 def _make_checkpointer(
-    task, cfg: DFWConfig, nw: int, comm_spec: str, telemetry=None
+    task, cfg: DFWConfig, nw: int, comm_spec: str, telemetry=None,
+    *, per_node_iterate: bool = False,
 ) -> Optional[ckpt.RunCheckpointer]:
     if cfg.checkpoint_dir is None:
         return None
@@ -527,6 +568,7 @@ def _make_checkpointer(
         save_every=cfg.checkpoint_every,
         keep_last=cfg.checkpoint_keep,
         telemetry=telemetry,
+        per_node_iterate=per_node_iterate,
         extra=ckpt.run_extra(
             task,
             num_workers=nw,
@@ -538,6 +580,7 @@ def _make_checkpointer(
             sample_prob=cfg.sample_prob,
             reweight=cfg.reweight,
             solver=cfg.solver,
+            topology=cfg.topology,
         ),
     )
 
@@ -581,21 +624,31 @@ def fit(
             "make them agree"
         )
     nw = mesh.shape[cfg.data_axis]
-    sspec = frank_wolfe.parse_solver(cfg.solver)
+    sspec, _, tspec = specs.validate(
+        solver=cfg.solver, comm=cfg.comm, topology=cfg.topology
+    )
     k_block = sspec.k if sspec.kind == "block" else 1
     max_rank = engine.resolve_max_rank(cfg.max_rank, cfg.num_epochs, k_block)
     tel = cfg.telemetry if cfg.telemetry is not None else Telemetry.noop()
     tel.event("run.start", "run", driver="launch.dfw.fit",
               task=type(task).__name__, d=int(task.d), m=int(task.m),
-              num_workers=nw, comm=cfg.comm, schedule=cfg.schedule,
+              num_workers=nw, comm=cfg.comm, topology=cfg.topology,
+              schedule=cfg.schedule,
               num_epochs=cfg.num_epochs, solver=cfg.solver)
 
-    # One reducer for every encoding — "dense" is the exact-psum reducer
-    # whose per-worker state is (), keeping the carry structure uniform.
-    reducer = comm_lib.make_reducer(
-        cfg.comm, num_workers=nw,
+    # The comm stack: a Topology (exchange graph) wrapping a Reducer (wire
+    # encoding). "flat" hands the bare reducer to the engine — the exact
+    # legacy psum path, bit for bit — while ring/gossip/hier pass the
+    # topology itself (it quacks like a Reducer: same ``exchange``
+    # signature, so nothing downstream changes shape).
+    topo = comm_lib.make_topology(
+        cfg.topology, num_workers=nw, comm=cfg.comm,
+        rounds=cfg.gossip_rounds,
         use_pallas=cfg.use_pallas, interpret=cfg.interpret,
     )
+    reducer = topo.reducer
+    comm_obj = reducer if tspec.kind == "flat" else topo
+    per_node = bool(getattr(comm_obj, "per_node", False))
 
     ktask = (
         kernelize(task, use_pallas=cfg.use_pallas, interpret=cfg.interpret)
@@ -676,7 +729,8 @@ def fit(
                 jnp.asarray(snap_probe), NamedSharding(mesh, P())
             )
         same_mesh = int(snap.extra.get("num_workers", -1)) == nw
-        if same_mesh and snap.extra.get("comm") == reducer.spec:
+        same_topo = snap.extra.get("topology", "flat") == cfg.topology
+        if same_mesh and same_topo and snap.extra.get("comm") == reducer.spec:
             # Bit-exact path: per-worker reducer state (e.g. top-k
             # error-feedback residuals) resumes exactly where it stopped.
             comm_state = jax.tree.map(
@@ -716,7 +770,9 @@ def fit(
                        "dispatches": 1, "compilations": 1, "host_syncs": 1},
             )
 
-    checkpointer = _make_checkpointer(task, cfg, nw, reducer.spec, tel)
+    checkpointer = _make_checkpointer(
+        task, cfg, nw, reducer.spec, tel, per_node_iterate=per_node
+    )
     if checkpointer is not None:
         # checkpoint_dir belongs to THIS run's timeline from here on: a
         # fresh run clears any previous run's steps, a resume keeps its
@@ -725,6 +781,22 @@ def fit(
         # (latest-step) resume.
         checkpointer.store.discard_after(start_t)
 
+    if per_node:
+        # Gossip: every worker evolves its own inexact-consensus iterate, so
+        # the (possibly resumed node-0) iterate is stacked along a leading
+        # worker axis sharded like the data rows — the exact treatment the
+        # per-worker reducer state already gets. A gossip resume is elastic
+        # here by construction: checkpoints store the node-0 slice and this
+        # broadcast re-seeds every node with it (the optimization dynamics
+        # themselves resume bit-exactly — they read only the task state).
+        it = jax.tree.map(
+            lambda leaf: jax.device_put(
+                jnp.broadcast_to(leaf, (nw,) + leaf.shape),
+                NamedSharding(mesh, P(cfg.data_axis)),
+            ),
+            it,
+        )
+
     wrapper = engine.shard_map_segment_wrapper(
         mesh,
         cfg.data_axis,
@@ -732,6 +804,7 @@ def fit(
         comm_state_example=comm_example,
         probe_example=probe_blk,
         has_masks=True,
+        per_node_iterate=per_node,
     )
     with tel.profiler():
         eres = engine.run_epochs(
@@ -743,7 +816,7 @@ def fit(
             schedule=cfg.schedule,
             step_size=cfg.step_size,
             axis_name=cfg.data_axis,
-            reducer=reducer,
+            reducer=comm_obj,
             comm_state=comm_state,
             iterate=it,
             masks=masks,
@@ -776,8 +849,14 @@ def fit(
     eres.stats["dispatches"] += 1
     eres.stats["host_syncs"] += 1
     eres.stats["compilations"] += 1
+    it_out = eres.carry.iterate
+    if per_node:
+        # Report node 0's iterate — the same convention gossip checkpoints
+        # use. All nodes agree to consensus tolerance; the caller's
+        # final_loss above is the exact full-data F of the *states*.
+        it_out = jax.tree.map(lambda a: a[0], it_out)
     return DFWFitResult(
-        iterate=eres.carry.iterate,
+        iterate=it_out,
         state=eres.carry.state,
         history=eres.history,
         masks=masks[: eres.epochs_run] if sampling else None,
@@ -803,7 +882,11 @@ def fit_serial(
     ``cfg.comm`` is honored with a one-worker reducer: the serial run
     *simulates* the compressed encoding (int8 at full 127-level budget,
     top-k with one worker's error feedback), which is what the
-    convergence-vs-bits sweeps compare against.
+    convergence-vs-bits sweeps compare against. ``cfg.topology`` is honored
+    the same way: a one-worker gossip exchange is the identity (a node
+    averaging with itself) and a one-worker ``hier:g`` applies the reducer
+    encoding at group width g — the serial baselines the topology tests and
+    sweeps compare their sharded runs against.
 
     ``cfg.sample_prob`` < 1 is rejected: the straggler model samples
     *workers*, and a serial run has exactly one — silently ignoring the
@@ -820,11 +903,16 @@ def fit_serial(
         if cfg.kernelize
         else task
     )
-    reducer = comm_lib.make_reducer(
-        cfg.comm, num_workers=1,
+    sspec, _, tspec = specs.validate(
+        solver=cfg.solver, comm=cfg.comm, topology=cfg.topology
+    )
+    topo = comm_lib.make_topology(
+        cfg.topology, num_workers=1, comm=cfg.comm,
+        rounds=cfg.gossip_rounds,
         use_pallas=cfg.use_pallas, interpret=cfg.interpret,
     )
-    sspec = frank_wolfe.parse_solver(cfg.solver)
+    reducer = topo.reducer
+    comm_obj = reducer if tspec.kind == "flat" else topo
     k_block = sspec.k if sspec.kind == "block" else 1
     state = ktask.init_state(jnp.asarray(x), jnp.asarray(y))
     iterate, comm_state, start_t, initial_history = None, None, 0, None
@@ -879,7 +967,7 @@ def fit_serial(
         schedule=cfg.schedule,
         step_size=cfg.step_size,
         callback=callback,
-        reducer=reducer,
+        reducer=comm_obj,
         max_rank=cfg.max_rank,
         gap_tol=cfg.gap_tol,
         block_epochs=cfg.block_epochs,

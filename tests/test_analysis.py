@@ -263,6 +263,39 @@ def test_rep006_inline_allow_requires_a_reason(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# REP007 — imports of retired modules (deleted compat shims)
+# ---------------------------------------------------------------------------
+
+
+def test_rep007_flags_every_import_spelling(tmp_path):
+    findings = _lint_src(tmp_path, "launch/old_importer.py", """
+        import repro.launch.hlo_analysis
+        from repro.launch import hlo_analysis
+        from repro.launch.hlo_analysis import analyze
+        from ..launch import hlo_analysis as ha
+        from .hlo_analysis import COLLECTIVES
+    """)
+    rep7 = [f for f in findings if f.code == "REP007"]
+    assert {f.line for f in rep7} == {2, 3, 4, 5, 6}
+    assert "repro.analysis.hlo" in rep7[0].message  # names the replacement
+
+
+def test_rep007_new_path_and_local_alias_are_clean(tmp_path):
+    findings = _lint_src(tmp_path, "launch/new_importer.py", """
+        from repro.analysis import hlo as hlo_analysis
+        from repro.analysis.hlo import analyze
+
+        res = hlo_analysis.analyze("HloModule m")
+    """)
+    assert _codes(findings) == []
+
+
+def test_rep007_retired_shim_is_really_gone():
+    with pytest.raises(ModuleNotFoundError):
+        import repro.launch.hlo_analysis  # noqa: F401  # REP007-ok: asserting the shim stays deleted
+
+
+# ---------------------------------------------------------------------------
 # Baseline workflow: freeze debt, fail on new, report stale
 # ---------------------------------------------------------------------------
 
@@ -395,6 +428,45 @@ def test_measure_exposes_the_hlo_walk():
     res = contracts.measure(_factored_score, *_score_args())
     assert res["collective_count"] == {}
     assert res["flops"] > 0
+
+
+def test_replica_groups_parsing_and_partition_crossing():
+    """The topology-aware byte classifier: explicit and iota replica-group
+    spellings parse, and crossing/local classification against a host
+    partition matches what hier two-level reduce promises."""
+    from repro.analysis import hlo
+
+    ex = ("%ar = f32[256]{0} all-reduce(%x), "
+          "replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add")
+    assert hlo.parse_replica_groups(ex) == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    iota = "%ar = f32[8]{0} all-reduce(%x), replica_groups=[2,4]<=[8]"
+    assert hlo.parse_replica_groups(iota) == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    # transposed iota is ambiguous here — refuse rather than guess
+    assert hlo.parse_replica_groups(
+        "replica_groups=[2,4]<=[4,2]T(1,0)") is None
+    assert hlo.parse_replica_groups("%ar = f32[4] all-reduce(%x)") is None
+    pairs = ("%cp = f32[4]{0} collective-permute(%x), "
+             "source_target_pairs={{0,1},{1,2},{3,4}}")
+    assert hlo.parse_replica_groups(pairs) == [[0, 1], [1, 2], [3, 4]]
+
+    text = """
+HloModule m
+
+ENTRY %main (x: f32[256]) -> f32[256] {
+  %x = f32[256]{0} parameter(0)
+  %intra = f32[256]{0} all-reduce(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %inter = f32[256]{0} all-reduce(%intra), replica_groups={{0,4},{1,5},{2,6},{3,7}}, to_apply=%add
+  ROOT %global = f32[256]{0} all-reduce(%inter), to_apply=%add
+}
+"""
+    res = hlo.partition_crossing_bytes(text, [[0, 1, 2, 3], [4, 5, 6, 7]])
+    # intra stays inside the cells; inter + group-less global cross
+    assert res["local"] == 2048.0 and res["local_count"] == 1.0
+    assert res["crossing"] == 4096.0 and res["crossing_count"] == 2.0
+    assert res["by_op"] == {"all-reduce": 4096.0}
+    # one cell: nothing can cross
+    one = hlo.partition_crossing_bytes(text, [[0, 1, 2, 3, 4, 5, 6, 7]])
+    assert one["crossing"] == 0.0 and one["local"] == 6144.0
 
 
 def test_collective_rounds_contract_subprocess_8way():

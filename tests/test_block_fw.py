@@ -488,7 +488,7 @@ def test_v2_checkpoint_stamps_solver_and_probe(tmp_path):
                         verify_kernels=False)
     dfw.fit_serial(task, x, y, cfg=cfg, key=jax.random.PRNGKey(1))
     _, extra = ckpt.read_run_extra(ckdir)
-    assert extra["payload_format"] == 2
+    assert extra["payload_format"] == ckpt.PAYLOAD_FORMAT
     assert extra["solver"] == "block:3"
     state = task.init_state(x, y)
     snap = ckpt.restore_run(ckdir, state_like=state)

@@ -103,7 +103,7 @@ def test_int8_stochastic_rounding_unbiased():
     trials = 4000
 
     def one(k):
-        y, _ = r.reduce(x, (), slot="u", key=k, axis_name=None)
+        y, _ = r.exchange(x, (), slot="u", key=k, axis_name=None)
         return y
 
     ys = jax.vmap(one)(jax.random.split(jax.random.fold_in(KEY, 2), trials))
@@ -116,14 +116,14 @@ def test_int8_stochastic_rounding_unbiased():
 def test_int8_roundtrip_error_bounded_by_grid_step():
     r = comm.Int8Reducer(num_workers=4)
     x = jax.random.normal(KEY, (257,))
-    y, _ = r.reduce(x, (), slot="v", key=jax.random.fold_in(KEY, 3), axis_name=None)
+    y, _ = r.exchange(x, (), slot="v", key=jax.random.fold_in(KEY, 3), axis_name=None)
     step = float(jnp.max(jnp.abs(x))) / r.budget
     assert float(jnp.max(jnp.abs(y - x))) <= step * (1 + 1e-6)
 
 
 def test_int8_zero_vector_is_fixed_point():
     r = comm.Int8Reducer(num_workers=8)
-    y, _ = r.reduce(jnp.zeros((32,)), (), slot="u", key=KEY, axis_name=None)
+    y, _ = r.exchange(jnp.zeros((32,)), (), slot="u", key=KEY, axis_name=None)
     np.testing.assert_array_equal(np.asarray(y), np.zeros(32, np.float32))
 
 
@@ -164,7 +164,7 @@ def test_topk_exact_when_k_covers_dim():
     r = comm.TopKReducer(k=64)
     st = r.init_state(16, 12)
     x = jax.random.normal(KEY, (16,))
-    y, st = r.reduce(x, st, slot="u", key=KEY, axis_name=None)
+    y, st = r.exchange(x, st, slot="u", key=KEY, axis_name=None)
     np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6)
     assert float(jnp.linalg.norm(st["u"])) == 0.0
 
@@ -180,8 +180,8 @@ def test_topk_error_feedback_residual_decays():
     x_norm = float(jnp.linalg.norm(x))
     ys, enorms = [], []
     for t in range(64):
-        y, st = r.reduce(x, st, slot="u", key=jax.random.fold_in(KEY, t),
-                         axis_name=None)
+        y, st = r.exchange(x, st, slot="u", key=jax.random.fold_in(KEY, t),
+                           axis_name=None)
         ys.append(np.asarray(y))
         enorms.append(float(jnp.linalg.norm(st["u"])))
     # residual stays under the EF plateau: with contraction factor
@@ -203,17 +203,17 @@ def test_topk_masked_worker_sends_nothing_and_freezes_residual():
     r = comm.TopKReducer(k=4)
     e0 = jax.random.normal(KEY, (16,))
     st = {"u": e0, "v": jnp.zeros((2,))}
-    y, st2 = r.reduce(jnp.zeros((16,)), st, slot="u",
-                      key=jax.random.fold_in(KEY, 1), axis_name=None,
-                      weight=jnp.float32(0.0))
+    y, st2 = r.exchange(jnp.zeros((16,)), st, slot="u",
+                        key=jax.random.fold_in(KEY, 1), axis_name=None,
+                        weight=jnp.float32(0.0))
     np.testing.assert_array_equal(np.asarray(y), np.zeros(16, np.float32))
     np.testing.assert_array_equal(np.asarray(st2["u"]), np.asarray(e0))
     # a live worker (any weight > 0, incl. fractional reweights) still sends
     x = jax.random.normal(jax.random.fold_in(KEY, 2), (16,))
-    y_w, _ = r.reduce(x, st, slot="u", key=jax.random.fold_in(KEY, 3),
-                      axis_name=None, weight=jnp.float32(8.0 / 5.0))
-    y_n, _ = r.reduce(x, st, slot="u", key=jax.random.fold_in(KEY, 3),
-                      axis_name=None, weight=None)
+    y_w, _ = r.exchange(x, st, slot="u", key=jax.random.fold_in(KEY, 3),
+                        axis_name=None, weight=jnp.float32(8.0 / 5.0))
+    y_n, _ = r.exchange(x, st, slot="u", key=jax.random.fold_in(KEY, 3),
+                        axis_name=None, weight=None)
     np.testing.assert_array_equal(np.asarray(y_w), np.asarray(y_n))
 
 
